@@ -1,0 +1,138 @@
+"""Beyond-paper benchmarks: real-measured autotuning + kernel micro-bench.
+
+1. ``real_dna_autotune`` — the paper's method with REAL wall-clock
+   measurements: tune the JAX DNA matcher's execution parameters (chunk
+   size, dtype paths) on this container's CPU; SAM finds a near-best
+   configuration with a fraction of enumeration's measurements.
+2. ``sharding_tuner_bench`` — SAML over the 256-chip distribution space
+   with the analytic roofline evaluator (the compiled evaluator is used
+   in the §Perf hillclimb; here the fast oracle keeps the benchmark
+   quick) — reports tuned vs default step-time bound.
+3. ``kernel_microbench`` — wall-clock of the DNA kernel pipeline vs the
+   sequential reference (the one kernel whose compiled XLA path is
+   meaningful on CPU).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import Autotuner, ConfigSpace, Param
+from repro.core.sharding_tuner import ShardingTuner
+from repro.kernels.dna_automaton import ops as dna_ops
+from repro.kernels.dna_automaton.ref import fa_match_ref
+from repro.launch import shapes
+
+
+def _timed(fn, *args, reps=3):
+    fn(*args)                                   # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def real_dna_autotune(n_bytes: int = 2_000_000, budget: int = 18):
+    """SAM with real wall-clock on the chunked DNA matcher's parameters."""
+    rng = np.random.default_rng(0)
+    text = jnp.asarray(rng.integers(0, 4, n_bytes).astype(np.uint8))
+    table, accept = dna_ops.build_motif_dfa("ACGTACGT")
+    table_j = jnp.asarray(table)
+    accept_j = jnp.asarray(accept)
+
+    space = ConfigSpace([
+        Param("chunk", (512, 1024, 2048, 4096, 8192, 16384, 32768)),
+        Param("two_pass", (True, False), ordinal=False),
+    ])
+
+    def run_cfg(cfg):
+        if cfg["two_pass"]:
+            fn = jax.jit(lambda t: dna_ops.fa_match(
+                t, table_j, accept_j, chunk=cfg["chunk"], interpret=True))
+        else:
+            fn = jax.jit(lambda t: fa_match_ref(t, table_j, accept_j)[0])
+        return _timed(fn, text, reps=1)
+
+    tuner = Autotuner(space, run_cfg)
+    em = tuner.tune_em()
+    tuner2 = Autotuner(space, run_cfg)
+    sam = tuner2.tune_sam(iterations=budget, seed=0)
+    rows = [{"method": "EM", "best_s": round(em.best_energy_measured, 4),
+             "config": str(em.best_config),
+             "experiments": em.n_experiments},
+            {"method": "SAM", "best_s": round(sam.best_energy_measured, 4),
+             "config": str(sam.best_config),
+             "experiments": sam.n_experiments}]
+    gap = 100 * (sam.best_energy_measured - em.best_energy_measured) \
+        / em.best_energy_measured
+    derived = (f"SAM within {gap:.1f}% of EM using "
+               f"{sam.n_experiments}/{em.n_experiments} real measurements")
+    return rows, derived
+
+
+def sharding_tuner_bench(arch: str = "qwen2-moe-a2.7b",
+                         cell_name: str = "train_4k"):
+    cell = shapes.SHAPE_CELLS[cell_name]
+    tuner = ShardingTuner(configs.get(arch), cell, mode="analytic")
+    base = tuner.baseline()
+    res = tuner.tune_saml(train_samples=48, iterations=1500, seed=0)
+    rows = [{
+        "config": "default-policy",
+        "bound_s": round(base["step_time_bound_s"], 4),
+        "dominant": base["dominant"],
+    }, {
+        "config": str(res.best_config),
+        "bound_s": round(res.best_energy, 4),
+        "dominant": "-",
+    }]
+    gain = base["step_time_bound_s"] / max(res.best_energy, 1e-12)
+    derived = (f"{arch} x {cell_name}: tuned/default = "
+               f"{gain:.2f}x bound improvement, "
+               f"{tuner.n_measurements} analytic measurements")
+    return rows, derived
+
+
+def kernel_microbench(n_bytes: int = 4_194_304, chunk: int = 4096):
+    """Chunk-parallel DFA matching (the PaREM decomposition) vs the
+    sequential scan, both XLA-compiled on CPU.  (The Pallas kernels are
+    TPU-target; interpret mode is a correctness path, not a perf path.)"""
+    from repro.kernels.dna_automaton.ref import chunk_state_map_ref
+    from repro.kernels.dna_automaton.ops import compose_maps
+    rng = np.random.default_rng(1)
+    text = jnp.asarray(rng.integers(0, 4, n_bytes).astype(np.uint8))
+    table, accept = dna_ops.build_motif_dfa("ACGTAC")
+    table_j = jnp.asarray(table)
+    accept_j = jnp.asarray(accept)
+
+    def parallel(t):
+        chunks = t.reshape(-1, chunk)
+        maps = jax.vmap(lambda c: chunk_state_map_ref(c, table_j))(chunks)
+        prefix = compose_maps(maps)
+        starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                  prefix[:-1, 0].astype(jnp.int32)])
+
+        def count(c, s0):
+            def stepf(state, sym):
+                state = table_j[state, sym]
+                return state, accept_j[state]
+            _, hits = jax.lax.scan(stepf, s0, c.astype(jnp.int32))
+            return hits.sum(dtype=jnp.int32)
+
+        return jax.vmap(count)(chunks, starts).sum()
+
+    t_par = _timed(jax.jit(parallel), text)
+    t_seq = _timed(jax.jit(lambda t: fa_match_ref(t, table_j, accept_j)[0]),
+                   text)
+    n_par = int(jax.jit(parallel)(text))
+    n_seq = int(jax.jit(lambda t: fa_match_ref(t, table_j, accept_j)[0])(text))
+    assert n_par == n_seq
+    rows = [{"impl": "chunk-parallel (PaREM decomposition)",
+             "s": round(t_par, 4)},
+            {"impl": "sequential scan", "s": round(t_seq, 4)}]
+    return rows, (f"chunk-parallel speedup = {t_seq/t_par:.2f}x "
+                  f"on {n_bytes/1e6:.0f}MB (1 CPU core)")

@@ -1,0 +1,67 @@
+"""Benchmark harness: one function per paper table/figure + beyond-paper.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = wall time of the
+whole benchmark function) and writes full tables to results/bench/.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2_motivation,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import EmilPlatformModel  # noqa: E402
+
+from . import beyond_paper, paper_tables  # noqa: E402
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "bench"
+
+
+def benches():
+    plat = EmilPlatformModel()
+    return {
+        "fig2_motivation": lambda: paper_tables.fig2_motivation(plat),
+        "tables_4_5_prediction_accuracy":
+            lambda: paper_tables.tables_4_5_prediction_accuracy(plat),
+        "tables_6_7_saml_vs_em":
+            lambda: paper_tables.tables_6_7_saml_vs_em(plat),
+        "tables_8_9_speedup": lambda: paper_tables.tables_8_9_speedup(plat),
+        "table_2_strategy_costs":
+            lambda: paper_tables.table_2_strategy_costs(plat),
+        "real_dna_autotune": beyond_paper.real_dna_autotune,
+        "sharding_tuner": beyond_paper.sharding_tuner_bench,
+        "kernel_microbench": beyond_paper.kernel_microbench,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+    selected = set(args.only.split(",")) if args.only else None
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    print("name,us_per_call,derived")
+    for name, fn in benches().items():
+        if selected and name not in selected:
+            continue
+        t0 = time.perf_counter()
+        rows, derived = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        print(f"{name},{us:.0f},{derived}", flush=True)
+        out = RESULTS / f"{name}.csv"
+        if rows:
+            with out.open("w", newline="") as f:
+                w = csv.DictWriter(f, fieldnames=list(rows[0]))
+                w.writeheader()
+                w.writerows(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""DNA-workload autotuning: the paper's full experiment + a real-measured run.
+
+Default: reproduce the paper's SAML-vs-EM comparison for all four DNA
+datasets on the calibrated Emil simulator (Tables VI-IX).
+
+--real: the same method with REAL wall-clock measurements — tune the
+chunk-parallel DNA matcher's execution parameters on this machine's CPU,
+then verify SAM gets near the enumerated optimum with a fraction of the
+measurements.  This exercises the actual Pallas kernel pipeline
+(state-map -> associative compose -> count).
+
+    PYTHONPATH=src python examples/dna_autotune.py [--real]
+"""
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+
+def simulated() -> None:
+    from repro.core import (Autotuner, DATASETS_GB, EmilPlatformModel,
+                            fit_emil_surrogates, paper_space)
+    platform = EmilPlatformModel()
+    print("=== SAML vs EM on the calibrated Emil simulator ===")
+    for name, gb in DATASETS_GB.items():
+        sur, n_train = fit_emil_surrogates(
+            platform, gb, datasets_gb=list(DATASETS_GB.values()), seed=0)
+        rng = np.random.default_rng(0)
+        tuner = Autotuner(paper_space(workload_step=3),
+                          measure=lambda c: platform.energy(c, gb, rng),
+                          truth=lambda c: platform.energy(c, gb, None),
+                          surrogate=sur, n_training_experiments=n_train)
+        em = tuner.tune_em()
+        saml = tuner.tune_saml(iterations=2000, seed=7,
+                               checkpoints=(250, 500, 1000, 2000))
+        print(f"\n{name} ({gb} GB): EM best {em.best_energy_measured:.3f}s "
+              f"({em.n_experiments} experiments)")
+        for it in (250, 500, 1000, 2000):
+            e, cfg = saml.checkpoints[it]
+            pct = 100 * (e - em.best_energy_measured) / em.best_energy_measured
+            print(f"  SAML@{it:<5d} {e:.3f}s  (+{pct:5.2f}%)  "
+                  f"split {cfg['host_fraction']}/{100-cfg['host_fraction']}")
+
+
+def real() -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.core import Autotuner, ConfigSpace, Param
+    from repro.kernels.dna_automaton import ops as dna_ops
+    import time
+
+    print("=== real-measured autotune of the JAX DNA matcher ===")
+    rng = np.random.default_rng(0)
+    text = jnp.asarray(rng.integers(0, 4, 4_000_000).astype(np.uint8))
+    table, accept = dna_ops.build_motif_dfa("ACGTACGT")
+    tj, aj = jnp.asarray(table), jnp.asarray(accept)
+
+    space = ConfigSpace([
+        Param("chunk", (512, 1024, 2048, 4096, 8192, 16384, 32768, 65536)),
+    ])
+
+    def measure(cfg):
+        fn = jax.jit(lambda t: dna_ops.fa_match(t, tj, aj,
+                                                chunk=cfg["chunk"],
+                                                interpret=True))
+        fn(text)                                  # compile
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(text))
+        return time.perf_counter() - t0
+
+    em = Autotuner(space, measure).tune_em()
+    sam = Autotuner(space, measure).tune_sam(iterations=5, seed=0)
+    print(f"EM  best {em.best_energy_measured*1e3:7.1f} ms  "
+          f"chunk={em.best_config['chunk']}  "
+          f"({em.n_experiments} measurements)")
+    print(f"SAM best {sam.best_energy_measured*1e3:7.1f} ms  "
+          f"chunk={sam.best_config['chunk']}  "
+          f"({sam.n_experiments} measurements)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--real", action="store_true")
+    args = ap.parse_args()
+    (real if args.real else simulated)()

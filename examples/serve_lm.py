@@ -1,0 +1,16 @@
+"""Batched serving: prefill a prompt batch, decode with KV caches.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen2.5-3b --smoke \
+        --batch 4 --prompt-len 32 --gen 24
+"""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv.insert(1, "--smoke") if "--smoke" not in sys.argv else None
+    main()

@@ -1,0 +1,3 @@
+"""repro: the ICPPW'16 work-distribution autotuner as a TPU-pod framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,28 @@
+"""The paper's primary contribution: combinatorial optimization (simulated
+annealing) + machine learning (boosted decision-tree regression) to find
+near-optimal work-distribution configurations on heterogeneous systems.
+
+Public surface:
+  ConfigSpace/Param      — discrete parameter spaces (space.py)
+  simulated_annealing    — the paper's SA (sa.py), + vectorized_sa
+  BoostedTreesRegressor  — from-scratch BDTR (bdtr.py)
+  Autotuner              — EM / EML / SAM / SAML strategies (autotuner.py)
+  EmilPlatformModel      — calibrated simulator of the paper's platform
+  fit_emil_surrogates    — the paper's 7200-experiment training pipeline
+"""
+
+from .autotuner import Autotuner, TuneReport, fit_emil_surrogates
+from .bdtr import BoostedTreesRegressor, absolute_error, percent_error
+from .evaluators import LearnedEvaluator, MeasurementEvaluator, SurrogatePair
+from .platform_model import DATASETS_GB, EmilPlatformModel
+from .sa import SAResult, SASchedule, simulated_annealing, vectorized_sa
+from .space import ConfigSpace, Param, paper_space
+
+__all__ = [
+    "Autotuner", "TuneReport", "fit_emil_surrogates",
+    "BoostedTreesRegressor", "absolute_error", "percent_error",
+    "LearnedEvaluator", "MeasurementEvaluator", "SurrogatePair",
+    "DATASETS_GB", "EmilPlatformModel",
+    "SAResult", "SASchedule", "simulated_annealing", "vectorized_sa",
+    "ConfigSpace", "Param", "paper_space",
+]

@@ -1,0 +1,85 @@
+"""Evaluation oracles for proposed system configurations.
+
+The paper distinguishes evaluating a configuration by *measurement*
+(running the experiment) from evaluating it by *machine learning*
+(predicting with the trained BDTR model).  Both are exposed behind the
+same callable interface so every search strategy (enumeration / SA) can be
+paired with either oracle — giving the paper's four methods EM, EML, SAM,
+SAML (Table II).
+
+``MeasurementEvaluator`` counts *experiments* (deduplicated — re-measuring
+an identical configuration is free in the paper's accounting since results
+are recorded); ``LearnedEvaluator`` counts predictions, which are
+effectively free.  The counters feed the effort comparison in
+EXPERIMENTS.md (Result 3: SAML needs ~5 % of EM's experiments).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Mapping
+
+import numpy as np
+
+from .bdtr import BoostedTreesRegressor
+from .space import ConfigSpace
+
+__all__ = ["MeasurementEvaluator", "LearnedEvaluator", "SurrogatePair"]
+
+
+class MeasurementEvaluator:
+    """Wraps a measurement function; counts distinct experiments."""
+
+    def __init__(self, fn: Callable[[Mapping[str, Any]], float],
+                 space: ConfigSpace, dedup: bool = True):
+        self._fn = fn
+        self._space = space
+        self._dedup = dedup
+        self._cache: dict[tuple, float] = {}
+        self.n_experiments = 0
+
+    def _key(self, cfg: Mapping[str, Any]) -> tuple:
+        return tuple(cfg[n] for n in self._space.names)
+
+    def __call__(self, cfg: Mapping[str, Any]) -> float:
+        key = self._key(cfg)
+        if self._dedup and key in self._cache:
+            return self._cache[key]
+        val = float(self._fn(cfg))
+        self.n_experiments += 1
+        if self._dedup:
+            self._cache[key] = val
+        return val
+
+
+@dataclass
+class SurrogatePair:
+    """Host + device execution-time models (the paper trains per side).
+
+    The combined objective is E(cfg) = max(T_host_hat, T_device_hat)
+    (paper Eq. 2 evaluated on predictions).
+    """
+
+    host: BoostedTreesRegressor
+    device: BoostedTreesRegressor
+    host_features: Callable[[Mapping[str, Any]], np.ndarray]
+    device_features: Callable[[Mapping[str, Any]], np.ndarray]
+
+    def predict_energy(self, cfg: Mapping[str, Any]) -> float:
+        f = float(cfg["host_fraction"])
+        th = self.host.predict(self.host_features(cfg)[None, :])[0] if f > 0 else 0.0
+        td = (self.device.predict(self.device_features(cfg)[None, :])[0]
+              if f < 100 else 0.0)
+        return float(max(th, td))
+
+
+class LearnedEvaluator:
+    """ML oracle: predicts E(cfg); counts predictions (not experiments)."""
+
+    def __init__(self, surrogate: SurrogatePair):
+        self._surrogate = surrogate
+        self.n_predictions = 0
+
+    def __call__(self, cfg: Mapping[str, Any]) -> float:
+        self.n_predictions += 1
+        return self._surrogate.predict_energy(cfg)

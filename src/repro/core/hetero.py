@@ -1,0 +1,119 @@
+"""Heterogeneous work distribution across JAX device groups.
+
+The paper's runtime mapped onto a JAX cluster: two device groups of
+different speed (host/accelerator there; mixed pod generations, or a
+degraded/straggling pod, here) process complementary fractions of every
+batch.  Both dispatches are asynchronous, so the step time is
+``E = max(T_a, T_b)`` — exactly the paper's objective (Eq. 2) — and the
+work fraction is the paper's tunable.
+
+Two tuning modes:
+  * ``proportional_rebalance`` — online controller from observed rates
+    (straggler mitigation: a slowing group sheds work every step);
+  * the full paper loop — ``Autotuner`` (SAM/SAML) over the fraction
+    space with measured step times as the objective, for the initial
+    configuration search.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["DeviceGroup", "HeterogeneousRunner", "proportional_rebalance"]
+
+
+@dataclass
+class DeviceGroup:
+    name: str
+    devices: list                       # jax devices
+    work_multiplier: int = 1            # test hook: emulate a slower group
+
+    def mesh(self) -> Mesh:
+        return Mesh(np.asarray(self.devices), ("data",))
+
+
+def proportional_rebalance(fraction: float, t_a: float, t_b: float,
+                           damping: float = 0.5) -> float:
+    """New fraction for group A from observed per-group times.
+
+    Observed rates: r_a = f/t_a, r_b = (1-f)/t_b; the equal-finish-time
+    split is r_a/(r_a+r_b).  ``damping`` smooths measurement noise.
+    """
+    f = min(max(fraction, 1e-3), 1 - 1e-3)
+    r_a = f / max(t_a, 1e-9)
+    r_b = (1.0 - f) / max(t_b, 1e-9)
+    target = r_a / (r_a + r_b)
+    return float((1 - damping) * f + damping * target)
+
+
+class HeterogeneousRunner:
+    """Split each batch between two device groups by a tunable fraction."""
+
+    def __init__(self, step_builder: Callable[[DeviceGroup], Callable],
+                 group_a: DeviceGroup, group_b: DeviceGroup,
+                 fraction: float = 0.5):
+        """``step_builder(group)`` returns ``fn(batch_rows) -> result`` that
+        runs on that group's devices (the builder jits with the group's
+        mesh).  ``fraction`` is group A's share of each batch."""
+        self.group_a = group_a
+        self.group_b = group_b
+        self.fraction = fraction
+        self._fn_a = step_builder(group_a)
+        self._fn_b = step_builder(group_b)
+        self.history: list[dict] = []
+
+    def _split(self, batch: dict) -> tuple[dict, dict]:
+        n = jax.tree.leaves(batch)[0].shape[0]
+        ga, gb = len(self.group_a.devices), len(self.group_b.devices)
+        n_a = int(round(n * self.fraction / ga)) * ga
+        n_a = min(max(n_a, ga), n - gb)
+        a = jax.tree.map(lambda x: x[:n_a], batch)
+        b = jax.tree.map(lambda x: x[n_a:], batch)
+        return a, b
+
+    def step(self, batch: dict, rebalance: bool = True) -> dict:
+        a, b = self._split(batch)
+        t0 = time.perf_counter()
+        ra = self._fn_a(a)                      # async dispatch
+        rb = self._fn_b(b)                      # overlaps with group A
+        jax.block_until_ready(ra)
+        t_a = time.perf_counter() - t0
+        jax.block_until_ready(rb)
+        t_b = time.perf_counter() - t0
+        rec = {
+            "fraction": self.fraction,
+            "t_a": t_a, "t_b": t_b, "t_step": max(t_a, t_b),
+            "rows_a": jax.tree.leaves(a)[0].shape[0],
+            "rows_b": jax.tree.leaves(b)[0].shape[0],
+        }
+        self.history.append(rec)
+        if rebalance:
+            self.fraction = proportional_rebalance(self.fraction, t_a, t_b)
+        return rec
+
+    # -- the paper's offline search over the fraction space -------------------
+    def tune_fraction_sa(self, batch: dict, *, iterations: int = 30,
+                         seed: int = 0) -> float:
+        """SAM over {fraction}: simulated annealing with measured energy."""
+        from .autotuner import Autotuner
+        from .space import ConfigSpace, Param
+
+        space = ConfigSpace([Param("fraction",
+                                   tuple(range(5, 100, 5)))])
+
+        def measure(cfg):
+            self.fraction = cfg["fraction"] / 100.0
+            rec = self.step(batch, rebalance=False)
+            return rec["t_step"]
+
+        tuner = Autotuner(space, measure)
+        report = tuner.tune_sam(iterations=iterations, seed=seed)
+        self.fraction = report.best_config["fraction"] / 100.0
+        return self.fraction

@@ -1,0 +1,146 @@
+"""Parametric performance model of the paper's experimental platform.
+
+The paper measures a DNA-sequence-analysis application on "Emil": a host
+with 2x Intel Xeon E5-2695v2 (48 hw threads, 30 MB L3, ~59.7 GB/s) plus an
+Intel Xeon Phi 7120P (61 cores / 244 threads, 352 GB/s, PCIe-attached).
+This container is CPU-only, so the *faithful reproduction* replaces the
+physical node with a calibrated analytic model with the same observable
+structure the paper reports:
+
+  * saturating thread-scaling on both sides (memory-bound stream workload),
+  * affinity multipliers (compact hurts, scatter/balanced help),
+  * offload overhead on the device side = fixed runtime startup + PCIe
+    transfer proportional to the offloaded bytes,
+  * mild cache superlinearity (smaller working set -> lower per-byte cost;
+    both sides have ~30 MB LLC, so partial fractions run disproportionately
+    faster — this is what makes the tuned split beat the naive
+    rate-proportional split, as in the paper's measurements),
+  * multiplicative lognormal measurement noise (seeded, reproducible).
+
+Calibration targets (from the paper): host-side execution times span
+~0.74-5.5 s and device-side ~0.9-42 s across the measured grid; the best
+split sits around 60/40-70/30 host/device for large inputs with 48 host
+threads (Fig. 2b); tuned-vs-host-only speedup ~1.7-1.95x and
+tuned-vs-device-only ~2.1-2.36x (Tables VIII-IX).  ``tests/test_platform_model.py``
+asserts these bands.
+
+The model evaluates E = max(T_host, T_device) (paper Eq. 2) — host and
+device shares run concurrently under the offload-overlap execution model.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Mapping
+
+import numpy as np
+
+__all__ = ["EmilPlatformModel", "DATASETS_GB"]
+
+# Real-world DNA sequence sizes used in the paper (GB).
+DATASETS_GB: dict[str, float] = {
+    "human": 3.17,
+    "mouse": 2.77,
+    "cat": 2.43,
+    "dog": 2.38,
+}
+
+
+@dataclass(frozen=True)
+class EmilPlatformModel:
+    """Analytic execution-time model for one (host, device) node."""
+
+    # Host: saturating rate R(h) = rate_max * h / (h + k)  [GB/s]
+    host_rate_max: float = 2.0
+    host_rate_k: float = 6.0
+    # Device (Xeon Phi): needs many threads to saturate.
+    device_rate_max: float = 3.5
+    device_rate_k: float = 80.0
+    # Offload overhead: fixed runtime startup + PCIe transfer of the share.
+    device_startup_s: float = 0.35
+    pcie_gbps: float = 6.0
+    # Cache superlinearity: per-byte cost multiplier  c0 + c1 * min(1, GB/ref)
+    host_cache_c0: float = 0.76
+    host_cache_c1: float = 0.24
+    device_cache_c0: float = 0.80
+    device_cache_c1: float = 0.20
+    cache_ref_gb: float = 3.2
+    # Affinity multipliers on execution time.
+    host_affinity_mult: Mapping[str, float] | None = None
+    device_affinity_mult: Mapping[str, float] | None = None
+    # Measurement noise (lognormal sigma); 0 disables.
+    noise_sigma: float = 0.015
+
+    def _host_aff(self, aff: str) -> float:
+        table = self.host_affinity_mult or {
+            "none": 1.00, "scatter": 0.98, "compact": 1.10,
+        }
+        return table[aff]
+
+    def _device_aff(self, aff: str, threads: int) -> float:
+        table = self.device_affinity_mult or {
+            "balanced": 0.96, "scatter": 1.00, "compact": 1.12,
+        }
+        m = table[aff]
+        # compact packs 4 threads/core: with few threads it strands cores.
+        if aff == "compact" and threads <= 60:
+            m *= 1.10
+        return m
+
+    # -- component times -------------------------------------------------------
+    def host_time(self, gb: float, threads: int, affinity: str) -> float:
+        """Noise-free host execution time for ``gb`` of input."""
+        if gb <= 0.0:
+            return 0.0
+        rate = self.host_rate_max * threads / (threads + self.host_rate_k)
+        cache = self.host_cache_c0 + self.host_cache_c1 * min(
+            1.0, gb / self.cache_ref_gb
+        )
+        return gb / rate * self._host_aff(affinity) * cache
+
+    def device_time(self, gb: float, threads: int, affinity: str) -> float:
+        """Noise-free device execution time (incl. offload overhead)."""
+        if gb <= 0.0:
+            return 0.0
+        rate = self.device_rate_max * threads / (threads + self.device_rate_k)
+        cache = self.device_cache_c0 + self.device_cache_c1 * min(
+            1.0, gb / self.cache_ref_gb
+        )
+        compute = gb / rate * self._device_aff(affinity, threads) * cache
+        return self.device_startup_s + gb / self.pcie_gbps + compute
+
+    # -- the measurement oracle -------------------------------------------------
+    def measure(self, config: Mapping, dataset_gb: float,
+                rng: np.random.Generator | None = None) -> tuple[float, float]:
+        """(T_host, T_device) for a full system configuration.
+
+        ``config`` uses the paper's parameter names (see ``space.paper_space``):
+        host_threads, device_threads, host_affinity, device_affinity,
+        host_fraction (percent of work mapped to the host).
+        """
+        f = float(config["host_fraction"]) / 100.0
+        th = self.host_time(dataset_gb * f, int(config["host_threads"]),
+                            str(config["host_affinity"]))
+        td = self.device_time(dataset_gb * (1.0 - f),
+                              int(config["device_threads"]),
+                              str(config["device_affinity"]))
+        if rng is not None and self.noise_sigma > 0:
+            th *= math.exp(rng.normal(0.0, self.noise_sigma)) if th > 0 else 1.0
+            td *= math.exp(rng.normal(0.0, self.noise_sigma)) if td > 0 else 1.0
+        return th, td
+
+    def energy(self, config: Mapping, dataset_gb: float,
+               rng: np.random.Generator | None = None) -> float:
+        """E = max(T_host, T_device)   (paper Eq. 2)."""
+        th, td = self.measure(config, dataset_gb, rng)
+        return max(th, td)
+
+    # -- reference points used by the paper's speedup tables ---------------------
+    def host_only_time(self, dataset_gb: float, threads: int = 48,
+                       affinity: str = "scatter") -> float:
+        return self.host_time(dataset_gb, threads, affinity)
+
+    def device_only_time(self, dataset_gb: float, threads: int = 240,
+                         affinity: str = "balanced") -> float:
+        return self.device_time(dataset_gb, threads, affinity)

@@ -1,0 +1,92 @@
+"""Flash-decode Pallas TPU kernel: one query token vs a long KV cache.
+
+Grid (B, KV, S/bs): for each (batch, kv-head) the kernel streams cache
+blocks through VMEM, carrying the online-softmax state for the
+``rep = H/KV`` query heads that share this kv head.  The grouped layout
+makes the score matmul (rep x hd) @ (hd x bs) — MXU-shaped when rep is
+padded to 8 sublanes — and reads each cache block exactly once (the HBM
+roofline for decode).
+
+A ``length`` scalar (SMEM) masks positions >= length, so one compiled
+kernel serves any fill level of a fixed-capacity cache.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale, n_s, block_s):
+    js = pl.program_id(2)
+
+    @pl.when(js == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # (rep, hd)
+    k = k_ref[0][:, 0].astype(jnp.float32)            # (bs, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (rep, bs)
+    pos = js * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    v = v_ref[0][:, 0].astype(jnp.float32)            # (bs, hd)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(js == n_s - 1)
+    def _final():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k, v, length, *, block_s: int = 512,
+                            interpret: bool = False):
+    """q: (B, KV, rep, hd); k/v: (B, S, KV, hd); length: (1,) int32.
+
+    Returns (B, KV, rep, hd) fp32.
+    """
+    b, kv, rep, hd = q.shape
+    s_len = k.shape[1]
+    block_s = min(block_s, s_len)
+    n_s = s_len // block_s
+    kernel = functools.partial(_kernel, scale=hd ** -0.5, n_s=n_s,
+                               block_s=block_s)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                 # `length` lands in SMEM
+        grid=(b, kv, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda b_, g, j, *_: (b_, g, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, hd),
+                         lambda b_, g, j, *_: (b_, j, g, 0)),
+            pl.BlockSpec((1, block_s, 1, hd),
+                         lambda b_, g, j, *_: (b_, j, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd),
+                               lambda b_, g, j, *_: (b_, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, hd), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, rep, hd), jnp.float32),
+        interpret=interpret,
+    )(length, q, k, v)

@@ -1,0 +1,27 @@
+"""Jit'd wrapper: (B, H, hd) x (B, S, KV, hd) GQA decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_kernel
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     length: jax.Array | int | None = None,
+                     block_s: int = 512,
+                     interpret: bool | None = None) -> jax.Array:
+    """q: (B, H, hd); k/v: (B, S, KV, hd). Returns (B, H, hd) fp32."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    if length is None:
+        length = k.shape[1]
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+    qg = q.reshape(b, kv, rep, hd)
+    out = decode_attention_kernel(qg, k, v, length, block_s=block_s,
+                                  interpret=interpret)
+    return out.reshape(b, h, hd)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, *, length=None):
+    """q: (B, H, hd); k/v: (B, S, KV, hd); length: scalar or None.
+
+    Attends over positions < length (all S if None). Returns (B, H, hd) f32.
+    """
+    b, h, hd = q.shape
+    s_len, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    qf = q.astype(jnp.float32).reshape(b, kv, rep, hd) * hd ** -0.5
+    s = jnp.einsum("bgrh,bsgh->bgrs", qf, k.astype(jnp.float32))
+    if length is not None:
+        valid = jnp.arange(s_len) < length
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bgrs,bsgh->bgrh", p, v.astype(jnp.float32))
+    return out.reshape(b, h, hd)

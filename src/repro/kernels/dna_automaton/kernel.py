@@ -1,0 +1,114 @@
+"""Chunk-parallel finite-automaton matching as Pallas TPU kernels.
+
+The paper's application is DFA-based DNA motif search (PaREM).  A DFA is
+sequential per symbol, but transition functions COMPOSE: processing a
+chunk from every possible start state yields a state-map vector
+m: S -> S, and m_ab = m_b[m_a].  That composition is associative — the
+classic parallel-FA-matching decomposition, and the reason this workload
+is "divisible" in the paper's sense (any chunk boundary works).
+
+Kernel 1 (``state_map``):   grid (n_chunks,) — each cell walks its chunk
+    once carrying the full S-vector of states in VREGs (the transition
+    table lives in VMEM; S and n_sym are tiny for DNA motifs).
+Kernel 2 (``count_hits``):  given each chunk's true start state (from the
+    host-side associative compose of the maps), each cell re-walks its
+    chunk counting accepting-state visits.
+
+HBM traffic: the text is read exactly twice; table/maps are negligible.
+The gather T[state, sym] vectorises over the S lanes (kernel 1) and over
+parallel streams (kernel 2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _state_map_kernel(text_ref, table_ref, map_ref, *, chunk):
+    tbl = table_ref[...]                          # (S, n_sym) int32
+    s, n_sym = tbl.shape
+    flat = tbl.reshape(-1)
+
+    def step(t, states):
+        sym = text_ref[t]
+        return jnp.take(flat, states * n_sym + sym)
+
+    states0 = jax.lax.broadcasted_iota(jnp.int32, (s,), 0)
+    map_ref[0, :] = jax.lax.fori_loop(0, chunk, step, states0)
+
+
+def state_map_kernel(text, table, *, chunk: int = 2048,
+                     interpret: bool = False):
+    """text: (T,) int32; table: (S, n_sym) int32 -> maps (T/chunk, S)."""
+    t = text.shape[0]
+    chunk = min(chunk, t)
+    while t % chunk:
+        chunk -= 1
+    n_chunks = t // chunk
+    s = table.shape[0]
+    return pl.pallas_call(
+        functools.partial(_state_map_kernel, chunk=chunk),
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec(table.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_chunks, s), jnp.int32),
+        interpret=interpret,
+    )(text.astype(jnp.int32), table.astype(jnp.int32))
+
+
+def _count_kernel(text_ref, table_ref, accept_ref, start_ref,
+                  count_ref, state_ref, *, chunk):
+    tbl = table_ref[...]
+    s, n_sym = tbl.shape
+    flat = tbl.reshape(-1)
+    acc = accept_ref[...]                          # (S,) int32 0/1
+
+    def step(t, carry):
+        state, hits = carry
+        sym = text_ref[t]
+        state = flat[state * n_sym + sym]
+        return state, hits + acc[state]
+
+    state0 = start_ref[0]
+    state, hits = jax.lax.fori_loop(0, chunk, step,
+                                    (state0, jnp.int32(0)))
+    count_ref[0] = hits
+    state_ref[0] = state
+
+
+def count_hits_kernel(text, table, accept, starts, *, chunk: int = 2048,
+                      interpret: bool = False):
+    """Counts accepting visits per chunk given per-chunk start states."""
+    t = text.shape[0]
+    chunk = min(chunk, t)
+    while t % chunk:
+        chunk -= 1
+    n_chunks = t // chunk
+    return pl.pallas_call(
+        functools.partial(_count_kernel, chunk=chunk),
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec(table.shape, lambda i: (0, 0)),
+            pl.BlockSpec(accept.shape, lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_chunks,), jnp.int32),
+            jax.ShapeDtypeStruct((n_chunks,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(text.astype(jnp.int32), table.astype(jnp.int32),
+      accept.astype(jnp.int32), starts.astype(jnp.int32))

@@ -1,0 +1,70 @@
+"""Public API: parallel DFA motif matching + motif-table construction.
+
+``fa_match`` = state-map kernel -> host-side associative compose (an
+O(log n_chunks) ``associative_scan`` of S-vectors) -> count kernel.
+Composition is ``m_ab = m_b[m_a]`` — tested associative-property via
+hypothesis in tests/test_dna_kernel.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import count_hits_kernel, state_map_kernel
+
+DNA_SYMBOLS = "ACGT"
+
+
+def build_motif_dfa(motif: str) -> tuple[np.ndarray, np.ndarray]:
+    """KMP-style DFA over {A,C,G,T} recognising ``motif`` occurrences.
+
+    Returns (table (S, 4) int32, accept (S,) bool) with S = len(motif)+1;
+    the accept state loops via its failure function so overlapping
+    occurrences all count.
+    """
+    m = len(motif)
+    sym_of = {c: i for i, c in enumerate(DNA_SYMBOLS)}
+    pat = [sym_of[c] for c in motif]
+    table = np.zeros((m + 1, 4), np.int32)
+    table[0, :] = 0
+    if m:
+        table[0, pat[0]] = 1
+    x = 0
+    for j in range(1, m + 1):
+        for c in range(4):
+            table[j, c] = table[x, c]
+        if j < m:
+            table[j, pat[j]] = j + 1
+            x = table[x, pat[j]]
+    accept = np.zeros(m + 1, bool)
+    accept[m] = True
+    return table, accept
+
+
+def compose_maps(maps: jax.Array) -> jax.Array:
+    """Prefix-compose chunk state maps: out[i] = m_0..i (inclusive)."""
+    def combine(a, b):            # a then b
+        return jnp.take_along_axis(b, a, axis=-1)
+
+    return jax.lax.associative_scan(combine, maps, axis=0)
+
+
+def fa_match(text: jax.Array, table: jax.Array, accept: jax.Array, *,
+             chunk: int = 2048, start_state: int = 0,
+             interpret: bool | None = None) -> jax.Array:
+    """Total motif matches in ``text`` ((T,) uint8 symbols). int32 scalar."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    table = jnp.asarray(table, jnp.int32)
+    accept = jnp.asarray(accept)
+    maps = state_map_kernel(text, table, chunk=chunk, interpret=interpret)
+    prefix = compose_maps(maps)                       # (n_chunks, S)
+    starts = jnp.concatenate([
+        jnp.asarray([start_state], jnp.int32),
+        prefix[:-1, start_state].astype(jnp.int32),
+    ])
+    counts, _ = count_hits_kernel(text, table, accept, starts, chunk=chunk,
+                                  interpret=interpret)
+    return counts.sum(dtype=jnp.int32)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for finite-automaton DNA motif matching.
+
+The paper's workload (PaREM [24] / refs [11,12]): run a DFA over a DNA
+byte stream and count accepting-state visits (motif matches).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fa_match_ref(text: jnp.ndarray, table: jnp.ndarray,
+                 accept: jnp.ndarray, start_state: int = 0):
+    """text: (T,) uint8 symbols in [0, n_sym); table: (S, n_sym) int32;
+    accept: (S,) bool.  Returns (match_count, final_state)."""
+    n_sym = table.shape[1]
+
+    def step(state, sym):
+        state = table[state, sym]
+        return state, accept[state]
+
+    final, hits = jax.lax.scan(step, jnp.int32(start_state),
+                               text.astype(jnp.int32))
+    return hits.sum(dtype=jnp.int32), final
+
+
+def chunk_state_map_ref(chunk: jnp.ndarray, table: jnp.ndarray):
+    """End state for EVERY start state after consuming ``chunk``.
+
+    This is the associative element of parallel FA matching: maps compose
+    as ``m_ab = m_b[m_a]``.  Returns (S,) int32.
+    """
+    s = table.shape[0]
+
+    def step(states, sym):
+        return table[states, sym], None
+
+    states, _ = jax.lax.scan(step, jnp.arange(s, dtype=jnp.int32),
+                             chunk.astype(jnp.int32))
+    return states

@@ -1,0 +1,63 @@
+"""Jit'd public wrapper: (B, T, H, hd) API + custom_vjp over the kernels.
+
+``interpret=None`` auto-selects: Pallas interpret mode on CPU (validation),
+compiled Mosaic on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bwd, flash_attention_fwd
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+def _fold(x):  # (B, T, H, hd) -> (B*H, T, hd)
+    b, t, h, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b * h, t, hd)
+
+
+def _unfold(x, b, h):  # (B*H, T, hd) -> (B, T, H, hd)
+    bh, t, hd = x.shape
+    return x.reshape(b, h, t, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash(q, k, v, causal, q_offset, interpret):
+    o, _ = flash_attention_fwd(q, k, v, causal=causal, q_offset=q_offset,
+                               interpret=interpret)
+    return o
+
+
+def _flash_fwd(q, k, v, causal, q_offset, interpret):
+    o, lse = flash_attention_fwd(q, k, v, causal=causal, q_offset=q_offset,
+                                 interpret=interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, q_offset, interpret, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                                     q_offset=q_offset, interpret=interpret)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, q_offset: int = 0,
+                    interpret: bool | None = None) -> jax.Array:
+    """q/k/v: (B, T, H, hd), kv already head-repeated. Differentiable."""
+    b, t, h, hd = q.shape
+    interp = _auto_interpret(interpret)
+    out = _flash(_fold(q), _fold(k), _fold(v), causal, q_offset, interp)
+    return _unfold(out, b, h)

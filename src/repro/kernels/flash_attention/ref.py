@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash attention (numerically exact softmax)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  q_offset: int = 0) -> jnp.ndarray:
+    """q: (B, Tq, H, hd); k, v: (B, Tk, H, hd). Returns (B, Tq, H, hd)."""
+    b, tq, h, hd = q.shape
+    tk = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    if causal:
+        qpos = q_offset + jnp.arange(tq)
+        kpos = jnp.arange(tk)
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

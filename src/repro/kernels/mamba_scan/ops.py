@@ -1,0 +1,47 @@
+"""Jit'd wrapper for the selective-scan kernel (custom_vjp: ref backward)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import selective_scan_kernel
+from .ref import selective_scan_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
+def _scan(x, delta, a, b, c, d, h0, block_d, chunk, interpret):
+    return selective_scan_kernel(x, delta, a, b, c, d, h0, block_d=block_d,
+                                 chunk=chunk, interpret=interpret)
+
+
+def _scan_fwd(x, delta, a, b, c, d, h0, block_d, chunk, interpret):
+    out = selective_scan_kernel(x, delta, a, b, c, d, h0, block_d=block_d,
+                                chunk=chunk, interpret=interpret)
+    return out, (x, delta, a, b, c, d, h0)
+
+
+def _scan_bwd(block_d, chunk, interpret, res, cts):
+    x, delta, a, b, c, d, h0 = res
+    _, vjp = jax.vjp(lambda *args: selective_scan_ref(*args),
+                     x, delta, a, b, c, d, h0)
+    return vjp(cts)
+
+
+_scan.defvjp(_scan_fwd, _scan_bwd)
+
+
+def selective_scan(x, delta, a, b, c, d, h0=None, *, block_d: int = 256,
+                   chunk: int = 64, interpret: bool | None = None):
+    """Differentiable fused selective scan; see kernel.py for layout."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bt, t, di = x.shape
+    s = a.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((bt, di, s), jnp.float32)
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    return _scan(f32(x), f32(delta), f32(a), f32(b), f32(c), f32(d),
+                 f32(h0), block_d, chunk, interpret)

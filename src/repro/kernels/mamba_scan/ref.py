@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, delta, a, b, c, d, h0=None):
+    """x, delta: (B, T, dI); a: (dI, S); b, c: (B, T, S); d: (dI,).
+
+    h_t = exp(delta_t * A) h_{t-1} + (delta_t * x_t) B_t
+    y_t = C_t . h_t + D * x_t
+    Returns (y (B,T,dI) f32, h_T (B,dI,S) f32).
+    """
+    bt, t, di = x.shape
+    s = a.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((bt, di, s), jnp.float32)
+
+    def step(h, inp):
+        x_t, d_t, b_t, c_t = inp
+        da = jnp.exp(d_t[..., None] * a)
+        h = da * h + (d_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, (x.swapaxes(0, 1), delta.swapaxes(0, 1),
+                                    b.swapaxes(0, 1), c.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1) + x * d, h

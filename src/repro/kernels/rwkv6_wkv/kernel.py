@@ -1,0 +1,86 @@
+"""RWKV-6 wkv recurrence as a chunked Pallas TPU kernel.
+
+Grid (B, H, T/L): the (hd x hd) per-head state lives in VMEM scratch and
+is carried across the innermost (time-chunk) grid dimension; each cell
+loads an (L, hd) block of r/k/v/w and steps through its L tokens with a
+``fori_loop``.  Keeping the state resident in VMEM is the entire point —
+the HBM traffic is exactly one read of r/k/v/w and one write of y
+(the CUDA wkv kernel's shared-memory strategy, translated to the TPU
+memory hierarchy).
+
+State is read out per chunk into the ``s_out`` block so callers can both
+resume (decode) and checkpoint the recurrence at chunk boundaries
+(matching the chunked-remat training layout in models/rwkv6.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, s_out_ref,
+            s_ref, *, chunk, n_chunks):
+    jc = pl.program_id(2)
+
+    @pl.when(jc == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0]
+
+    u = u_ref[0]                                   # (hd,)
+
+    def step(t, _):
+        r_t = r_ref[0, t, 0]                       # (hd,)
+        k_t = k_ref[0, t, 0]
+        v_t = v_ref[0, t, 0]
+        w_t = w_ref[0, t, 0]
+        s = s_ref[...]                             # (hd, hd) key x value
+        kv = k_t[:, None] * v_t[None, :]
+        y = ((s + u[:, None] * kv) * r_t[:, None]).sum(axis=0)
+        y_ref[0, t, 0] = y.astype(y_ref.dtype)
+        s_ref[...] = w_t[:, None] * s + kv
+        return ()
+
+    jax.lax.fori_loop(0, chunk, step, ())
+
+    @pl.when(jc == n_chunks - 1)
+    def _final():
+        s_out_ref[0, 0] = s_ref[...]
+
+
+def wkv6_kernel(r, k, v, w, u, s0, *, chunk: int = 64,
+                interpret: bool = False):
+    """r,k,v,w: (B, T, H, hd) f32; u: (H, hd); s0: (B, H, hd, hd).
+
+    Returns (y (B,T,H,hd) f32, s_T (B,H,hd,hd) f32).
+    """
+    b, t, h, hd = r.shape
+    chunk = min(chunk, t)
+    while t % chunk:
+        chunk -= 1
+    n_chunks = t // chunk
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    seq_spec = pl.BlockSpec((1, chunk, 1, hd), lambda b_, h_, j: (b_, j, h_, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, n_chunks),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, hd), lambda b_, h_, j: (h_, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b_, h_, j: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, 1, hd, hd), lambda b_, h_, j: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, h, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)

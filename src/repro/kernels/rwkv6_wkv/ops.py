@@ -1,0 +1,50 @@
+"""Jit'd wrapper for the wkv6 kernel, differentiable via custom_vjp.
+
+Forward runs the Pallas kernel (state resident in VMEM).  Backward
+recomputes through the reference recurrence with ``jax.vjp`` — state
+recurrences keep O(T) residuals otherwise; recompute-in-backward is the
+standard training strategy for linear-attention kernels (upstream code
+additionally chunk-remats, bounding the recompute window).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import wkv6_kernel
+from .ref import wkv6_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _wkv(r, k, v, w, u, s0, chunk, interpret):
+    return wkv6_kernel(r, k, v, w, u, s0, chunk=chunk, interpret=interpret)
+
+
+def _wkv_fwd(r, k, v, w, u, s0, chunk, interpret):
+    out = wkv6_kernel(r, k, v, w, u, s0, chunk=chunk, interpret=interpret)
+    return out, (r, k, v, w, u, s0)
+
+
+def _wkv_bwd(chunk, interpret, res, cts):
+    r, k, v, w, u, s0 = res
+    _, vjp = jax.vjp(lambda *a: wkv6_ref(*a), r, k, v, w, u, s0)
+    return vjp(cts)
+
+
+_wkv.defvjp(_wkv_fwd, _wkv_bwd)
+
+
+def wkv6(r, k, v, w, u, s0=None, *, chunk: int = 64,
+         interpret: bool | None = None):
+    """r,k,v,w: (B,T,H,hd) f32; u: (H,hd). Returns (y, s_T). Differentiable."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, t, h, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    return _wkv(r.astype(jnp.float32), k.astype(jnp.float32),
+                v.astype(jnp.float32), w.astype(jnp.float32),
+                u.astype(jnp.float32), s0, chunk, interpret)

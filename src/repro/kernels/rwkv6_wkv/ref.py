@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the RWKV-6 wkv recurrence (sequential scan)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, s0=None):
+    """r,k,v,w: (B, T, H, hd) fp32 (w = multiplicative decay in (0,1));
+    u: (H, hd).  Returns (y (B,T,H,hd), s_T (B,H,hd,hd))."""
+    b, t, h, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[..., :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    s, ys = jax.lax.scan(step, s0, (r.swapaxes(0, 1), k.swapaxes(0, 1),
+                                    v.swapaxes(0, 1), w.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), s

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  Single-pod: 256 chips as
+(data=16, model=16).  Multi-pod: 2 pods x 256 chips as
+(pod=2, data=16, model=16) — the pod axis is the DCN-connected dimension.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         shape: tuple[int, ...] | None = None,
+                         axes: tuple[str, ...] | None = None) -> Mesh:
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    if axes is None:
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(n_devices: int | None = None,
+                   axes: tuple[str, ...] = ("data",)) -> Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), axes, axis_types=(AxisType.Auto,) * len(axes))

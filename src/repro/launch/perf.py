@@ -1,0 +1,114 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration driver: evaluate one (arch x cell) under config overrides.
+
+Each invocation is one hypothesis->measure cycle of the §Perf loop:
+lower+compile on the production mesh, trip-weighted collective census,
+analytic ledger -> roofline terms, plus a per-kind collective breakdown
+so the dominant term can be attributed.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch jamba-v0.1-52b \
+        --shape train_4k [--set microbatches=4 remat=False ...] \
+        [--mesh-shape 64x4]
+"""
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+
+from .. import configs                  # noqa: E402
+from ..roofline import analysis         # noqa: E402
+from ..roofline.hlo import collective_census  # noqa: E402
+from . import policies, shapes, steps   # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+
+def parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    if v in ("True", "False"):
+        v = v == "True"
+    elif v.isdigit():
+        v = int(v)
+    elif "," in v:
+        v = tuple(x for x in v.split(",") if x)
+    return k, v
+
+
+def evaluate(arch: str, shape: str, scfg_overrides: dict,
+             arch_overrides: dict, mesh_shape=(16, 16),
+             mesh_axes=("data", "model")) -> dict:
+    cell = shapes.SHAPE_CELLS[shape]
+    cfg = policies.arch_for_cell(configs.get(arch), cell)
+    if arch_overrides:
+        cfg = dataclasses.replace(cfg, **arch_overrides)
+    scfg = policies.default_sharding(cfg, cell)
+    if scfg_overrides:
+        scfg = dataclasses.replace(scfg, **scfg_overrides)
+    mesh = make_production_mesh(shape=mesh_shape, axes=mesh_axes)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if cell.kind == "train":
+            bundle = steps.make_train_step(cfg, scfg, mesh,
+                                           policies.default_opt(cfg),
+                                           shapes.batch_specs_for(cfg, cell))
+        elif cell.kind == "prefill":
+            bundle = steps.make_prefill_step(cfg, scfg, mesh,
+                                             shapes.batch_specs_for(cfg, cell),
+                                             max_len=cell.seq_len)
+        else:
+            bundle = steps.make_serve_step(cfg, scfg, mesh,
+                                           cell.global_batch, cell.seq_len)
+        compiled = bundle.lower().compile()
+        txt = compiled.as_text()
+        census = collective_census(txt)
+        ma = compiled.memory_analysis()
+    ledger = analysis.analytic_cost(cfg, cell, scfg, n_chips=n_chips)
+    terms = analysis.roofline_terms(
+        ledger, census["transfer_bytes_per_step"], n_chips)
+    peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30
+    return {
+        "arch": arch, "cell": shape, "mesh": "x".join(map(str, mesh_shape)),
+        "overrides": {**scfg_overrides, **arch_overrides},
+        "compile_s": round(time.time() - t0, 1),
+        "peak_gb": round(peak, 2),
+        **{k: (round(v, 5) if isinstance(v, float) else v)
+           for k, v in terms.items()},
+        "collective_breakdown_gb": {
+            k: round(v["transfer_bytes"] / 2**30, 3)
+            for k, v in census["weighted"].items()
+            if v["transfer_bytes"]},
+        "ledger_detail_top": dict(sorted(
+            ((k, f"{v['flops']:.3g}F/{v['hbm']/2**30:.2f}GiB")
+             for k, v in ledger.detail.items()),
+            key=lambda kv: kv[0])),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_NAMES)
+    ap.add_argument("--shape", required=True, choices=list(shapes.SHAPE_CELLS))
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="ShardingConfig overrides k=v")
+    ap.add_argument("--arch-set", nargs="*", default=[],
+                    help="ArchConfig overrides k=v")
+    ap.add_argument("--mesh-shape", default="16x16")
+    args = ap.parse_args()
+    scfg_over = dict(parse_override(kv) for kv in args.set)
+    arch_over = dict(parse_override(kv) for kv in args.arch_set)
+    mesh_shape = tuple(int(x) for x in args.mesh_shape.split("x"))
+    axes = ("data", "model") if len(mesh_shape) == 2 \
+        else ("pod", "data", "model")
+    rec = evaluate(args.arch, args.shape, scfg_over, arch_over,
+                   mesh_shape, axes)
+    print(json.dumps(rec, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

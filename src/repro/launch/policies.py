@@ -1,0 +1,72 @@
+"""Default per-(arch x cell) distribution policies.
+
+These are the *paper-faithful baseline* configurations: sensible static
+choices an engineer would write down before running the autotuner.  The
+sharding tuner (repro.core.sharding_tuner) then searches around them; the
+EXPERIMENTS.md §Perf log records baseline vs tuned.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..dist.sharding import ShardingConfig
+from ..models.config import ArchConfig
+from ..optim.adamw import AdamWConfig
+from .shapes import ShapeCell
+
+# param_dtype: bf16 for >30B (training at that scale is mixed-precision);
+# int8 moments only where fp32 Adam cannot fit 16 GB/chip (340B @ 256).
+_BIG = 30e9
+_HUGE = 150e9
+
+
+def arch_for_cell(cfg: ArchConfig, cell: ShapeCell) -> ArchConfig:
+    n = cfg.param_count()
+    upd: dict = {}
+    if n > _BIG:
+        upd["param_dtype"] = "bfloat16"
+    if cell.kind != "train":
+        upd["param_dtype"] = "bfloat16"     # serving always bf16 weights
+    return dataclasses.replace(cfg, **upd) if upd else cfg
+
+
+def default_opt(cfg: ArchConfig) -> AdamWConfig:
+    return AdamWConfig(
+        learning_rate=3e-4,
+        moments_dtype="int8" if cfg.param_count() > _HUGE else "float32",
+    )
+
+
+def default_microbatches(cfg: ArchConfig, cell: ShapeCell) -> int:
+    if cell.kind != "train":
+        return 1
+    if cfg.d_model >= 16384:
+        return 8
+    if cfg.d_model >= 8192:
+        return 4
+    return 1
+
+
+def default_sharding(cfg: ArchConfig, cell: ShapeCell,
+                     multi_pod: bool = False) -> ShardingConfig:
+    kv = "heads"
+    if cell.kind in ("decode", "prefill"):
+        if cell.global_batch == 1:
+            kv = "seq"
+        elif cfg.n_kv_heads < 16:
+            kv = "batch_seq"
+    # Inference keeps fsdp axes on params too: 2D weight sharding (D over
+    # data, F over model) so a 340B bf16 model fits 256 chips at serve —
+    # the per-layer partial-sum all-reduce over `data` is tiny at decode.
+    return ShardingConfig(
+        data_axes=("data",),
+        model_axes=("model",),
+        fsdp_axes=("data",),
+        expert_axes=("model",),
+        kv_shard=kv,
+        seq_parallel=cell.kind == "train",
+        microbatches=default_microbatches(cfg, cell),
+        remat=cell.kind == "train",
+        moments_dtype=default_opt(cfg).moments_dtype,
+    )

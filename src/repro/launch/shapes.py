@@ -1,0 +1,91 @@
+"""Assigned input-shape cells and ShapeDtypeStruct input specs.
+
+Four cells per architecture (where applicable):
+
+  train_4k      seq 4,096   global_batch 256   -> train_step
+  prefill_32k   seq 32,768  global_batch 32    -> serve prefill
+  decode_32k    seq 32,768  global_batch 128   -> serve_step (1 new token,
+                                                  KV cache of seq_len)
+  long_500k     seq 524,288 global_batch 1     -> serve_step; only for
+                                                  sub-quadratic families
+                                                  (rwkv6, jamba)
+
+``input_specs`` produces weak-type-correct ShapeDtypeStruct stand-ins for
+every model input — shardable, no device allocation — exactly what
+``jax.jit(...).lower(**specs)`` wants.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ArchConfig
+
+__all__ = ["ShapeCell", "SHAPE_CELLS", "applicable", "batch_specs_for",
+           "all_cells"]
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str                 # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPE_CELLS: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}
+
+# Whisper decode cells: fixed-length precomputed encoder state.
+WHISPER_CROSS_LEN = 1024
+
+
+def applicable(cfg: ArchConfig, cell: ShapeCell) -> tuple[bool, str]:
+    """(is_applicable, reason-if-not). Skips follow DESIGN.md §4."""
+    if cell.name == "long_500k" and not cfg.supports_long_context:
+        return False, "full quadratic attention: 500k decode cache skipped"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs_for(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStructs for the data batch of one cell."""
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        if cfg.encdec:
+            return {
+                "frame_embeds": _sds((b, s, cfg.d_model), jnp.bfloat16),
+                "tokens": _sds((b, cfg.decoder_len), jnp.int32),
+                "labels": _sds((b, cfg.decoder_len), jnp.int32),
+            }
+        out = {"tokens": _sds((b, s), jnp.int32),
+               "labels": _sds((b, s), jnp.int32)}
+        if cfg.frontend == "stub_patches":
+            out["patch_embeds"] = _sds((b, cfg.n_patches, cfg.d_model),
+                                       jnp.bfloat16)
+        return out
+    if cell.kind == "prefill":
+        if cfg.encdec:
+            return {"frame_embeds": _sds((b, s, cfg.d_model), jnp.bfloat16)}
+        out = {"tokens": _sds((b, s), jnp.int32)}
+        if cfg.frontend == "stub_patches":
+            out["patch_embeds"] = _sds((b, cfg.n_patches, cfg.d_model),
+                                       jnp.bfloat16)
+        return out
+    # decode: one new token; the KV cache (capacity seq_len) is state
+    return {"tokens": _sds((b, 1), jnp.int32),
+            "pos": _sds((), jnp.int32)}
+
+
+def all_cells(cfg: ArchConfig) -> list[ShapeCell]:
+    return [c for c in SHAPE_CELLS.values() if applicable(cfg, c)[0]]

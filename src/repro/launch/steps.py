@@ -1,0 +1,216 @@
+"""Jitted step builders: train_step, prefill_step, serve_step.
+
+Each builder binds (model, sharding config, mesh) and returns the jitted
+function plus the in/out sharding trees the dry-run and drivers need.
+Sharding constraints inside the model are baked at trace time via
+``use_rules``, so all tracing/lowering must go through these wrappers.
+
+train_step = microbatched grad accumulation (lax.scan, fp32 accumulator)
+-> global-norm clip -> AdamW (optionally int8 moments) -> donated state.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..dist import sharding as shd
+from ..dist.api import use_rules
+from ..dist.compression import (CompressionConfig, compress_with_feedback,
+                                init_error_state)
+from ..models import build_model
+from ..models.config import ArchConfig
+from ..optim.adamw import AdamWConfig, apply_updates, global_norm, init_opt_state
+
+Params = Any
+
+
+@dataclass
+class StepBundle:
+    """A jitted step with its sharding trees and shape specs."""
+    fn: Callable
+    in_shardings: tuple
+    out_shardings: Any
+    in_specs: tuple           # ShapeDtypeStruct trees for .lower()
+    donate_argnums: tuple = ()
+    rules: Any = None
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        with use_rules(self.rules):
+            return jitted.lower(*self.in_specs)
+
+    def jit(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+
+def _named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def state_shapes(cfg: ArchConfig, opt_cfg: AdamWConfig) -> dict:
+    """ShapeDtypeStruct tree for {params, opt, step} without allocation."""
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt = jax.eval_shape(functools.partial(init_opt_state, cfg=opt_cfg),
+                         params)
+    return {"params": params, "opt": opt,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def make_train_step(cfg: ArchConfig, scfg: shd.ShardingConfig, mesh: Mesh,
+                    opt_cfg: AdamWConfig, batch_shapes: dict) -> StepBundle:
+    model = build_model(cfg)
+    rules = scfg.rules(mesh)
+    n_micro = scfg.microbatches
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        remat_arg = (scfg.remat_policy if (scfg.remat and
+                     scfg.remat_policy != "full") else scfg.remat)
+
+        def loss_fn(p, mb):
+            loss, metrics = model.loss(p, mb, remat=remat_arg)
+            return loss, metrics
+
+        if n_micro > 1:
+            micro = jax.tree.map(
+                lambda a: a.reshape(n_micro, a.shape[0] // n_micro,
+                                    *a.shape[1:]), batch)
+
+            def accum(carry, mb):
+                gsum, lsum = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                gsum = jax.tree.map(
+                    lambda s, x: s + x.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (gsum, lsum), _ = jax.lax.scan(accum, (g0, jnp.float32(0.0)),
+                                           micro)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = lsum / n_micro
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+
+        new_state_extra = {}
+        if scfg.grad_compression != "none":
+            ccfg = CompressionConfig(scheme=scfg.grad_compression)
+            grads, new_err = compress_with_feedback(grads, state["err"],
+                                                    ccfg)
+            new_state_extra["err"] = new_err
+        new_params, new_opt = apply_updates(params, grads, state["opt"],
+                                            opt_cfg)
+        metrics = {"loss": loss, "gnorm": global_norm(grads),
+                   "step": state["step"] + 1}
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1, **new_state_extra}, metrics)
+
+    st_shapes = state_shapes(cfg, opt_cfg)
+    state_spec = {
+        "params": shd.param_specs(st_shapes["params"], mesh, scfg),
+        "opt": shd.opt_specs(st_shapes["opt"], st_shapes["params"], mesh,
+                             scfg),
+        "step": P(),
+    }
+    if scfg.grad_compression != "none":
+        st_shapes["err"] = jax.eval_shape(init_error_state,
+                                          st_shapes["params"])
+        state_spec["err"] = shd.param_specs(st_shapes["params"], mesh, scfg)
+    batch_spec = shd.batch_specs(batch_shapes, mesh, scfg)
+    metrics_spec = {"loss": P(), "gnorm": P(), "step": P()}
+    return StepBundle(
+        fn=train_step,
+        in_shardings=(_named(mesh, state_spec), _named(mesh, batch_spec)),
+        out_shardings=(_named(mesh, state_spec), _named(mesh, metrics_spec)),
+        in_specs=(st_shapes, batch_shapes),
+        donate_argnums=(0,),
+        rules=rules,
+    )
+
+
+def make_prefill_step(cfg: ArchConfig, scfg: shd.ShardingConfig, mesh: Mesh,
+                      batch_shapes: dict, max_len: int = 0) -> StepBundle:
+    model = build_model(cfg)
+    rules = scfg.rules(mesh)
+
+    if cfg.encdec:
+        def prefill_step(params, batch):
+            b = batch["frame_embeds"].shape[0]
+            state = model.init_decode_state(b, max(max_len, cfg.decoder_len),
+                                            cross_len=batch[
+                                                "frame_embeds"].shape[1])
+            return model.prefill_cross(params, state, batch["frame_embeds"])
+    else:
+        def prefill_step(params, batch):
+            return model.prefill(params, batch["tokens"], max_len=max_len,
+                                 patch_embeds=batch.get("patch_embeds"))
+
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    params_spec = shd.param_specs(params_shapes, mesh, scfg)
+    batch_spec = shd.batch_specs(batch_shapes, mesh, scfg)
+    with use_rules(rules):
+        out_shapes = jax.eval_shape(prefill_step, params_shapes, batch_shapes)
+
+    def out_spec_of(shapes):
+        if cfg.encdec:
+            return shd.cache_specs(shapes, mesh, scfg)
+        logits_spec = P(tuple(scfg.batch_axes(mesh)), None, None)
+        return (logits_spec, shd.cache_specs(shapes[1], mesh, scfg))
+
+    out_spec = out_spec_of(out_shapes)
+    return StepBundle(
+        fn=prefill_step,
+        in_shardings=(_named(mesh, params_spec), _named(mesh, batch_spec)),
+        out_shardings=_named(mesh, out_spec),
+        in_specs=(params_shapes, batch_shapes),
+        rules=rules,
+    )
+
+
+def make_serve_step(cfg: ArchConfig, scfg: shd.ShardingConfig, mesh: Mesh,
+                    batch: int, max_len: int) -> StepBundle:
+    """Single-token decode with a KV cache of capacity ``max_len``."""
+    model = build_model(cfg)
+    rules = scfg.rules(mesh)
+
+    def serve_step(params, state, tokens, pos):
+        logits, new_state = model.decode_step(params, state, tokens, pos)
+        return logits, new_state
+
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    kw = {"cross_len": 1024} if cfg.encdec else {}
+    state_shapes_ = jax.eval_shape(
+        functools.partial(model.init_decode_state, batch, max_len, **kw))
+    params_spec = shd.param_specs(params_shapes, mesh, scfg)
+    cache_spec = shd.cache_specs(state_shapes_, mesh, scfg)
+    batch_axes = tuple(scfg.batch_axes(mesh))
+    tok_spec = P(batch_axes if scfg.kv_shard != "seq" else None, None)
+    logits_spec = P(batch_axes if scfg.kv_shard != "seq" else None, None, None)
+    tok_shape = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
+    return StepBundle(
+        fn=serve_step,
+        in_shardings=(_named(mesh, params_spec), _named(mesh, cache_spec),
+                      NamedSharding(mesh, tok_spec), NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, logits_spec),
+                       _named(mesh, cache_spec)),
+        in_specs=(params_shapes, state_shapes_, tok_shape, pos_shape),
+        donate_argnums=(1,),
+        rules=rules,
+    )

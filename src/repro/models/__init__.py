@@ -1,0 +1,12 @@
+"""Model zoo: functional JAX implementations of the assigned architectures."""
+
+from .config import ArchConfig, MambaConfig, MoEConfig, RwkvConfig
+from .encdec import EncDec
+from .lm import LM
+
+__all__ = ["ArchConfig", "MambaConfig", "MoEConfig", "RwkvConfig",
+           "EncDec", "LM", "build_model"]
+
+
+def build_model(cfg: ArchConfig):
+    return EncDec(cfg) if cfg.encdec else LM(cfg)

@@ -1,0 +1,180 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, S_enc, D) straight into the encoder.
+Encoder layers are bidirectional self-attention; decoder layers are causal
+self-attention + cross-attention + MLP.  Sinusoidal positions on both
+streams (deviation from Whisper's learned decoder positions — noted in
+DESIGN.md; irrelevant to systems behaviour).
+
+Decode cells: the self-attention cache has the cell's ``seq_len`` capacity
+(per the assignment's decode-shape definition) while cross-attention reads
+a fixed-length precomputed encoder state (``cross_len``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.api import constrain
+from .attention import (decode_attention, full_attention, init_attention,
+                        init_kv_cache, precompute_cross_kv)
+from .config import ArchConfig
+from .layers import (apply_mlp, apply_norm, embed_tokens, init_embed,
+                     init_mlp, init_norm, sinusoidal_positions)
+from .lm import _remat_policy, chunked_xent
+
+Params = dict[str, Any]
+
+
+def _init_enc_layer(key, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"norm1": init_norm(cfg), "mixer": init_attention(k1, cfg),
+            "norm2": init_norm(cfg), "channel": init_mlp(k2, cfg)}
+
+
+def _init_dec_layer(key, cfg: ArchConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm1": init_norm(cfg), "self": init_attention(k1, cfg),
+            "norm_x": init_norm(cfg), "cross": init_attention(k2, cfg,
+                                                              cross=True),
+            "norm2": init_norm(cfg), "channel": init_mlp(k3, cfg)}
+
+
+@dataclass(frozen=True)
+class EncDec:
+    cfg: ArchConfig
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k_emb, k_enc, k_dec = jax.random.split(key, 3)
+        enc_keys = jax.random.split(k_enc, cfg.n_encoder_layers)
+        dec_keys = jax.random.split(k_dec, cfg.n_layers)
+        return {
+            "embed": init_embed(k_emb, cfg),
+            "encoder": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+            "enc_norm": init_norm(cfg),
+            "decoder": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+            "final_norm": init_norm(cfg),
+        }
+
+    # -- encoder -----------------------------------------------------------------
+    def encode(self, params: Params, frames: jax.Array,
+               remat: bool = False) -> jax.Array:
+        cfg = self.cfg
+        dtc = jnp.dtype(cfg.compute_dtype)
+        pos = sinusoidal_positions(frames.shape[1], cfg.d_model).astype(dtc)
+        x = frames.astype(dtc) + pos
+        x = constrain(x, "batch", "seq", None)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+        def body(h, lp):
+            a = full_attention(lp["mixer"], apply_norm(lp["norm1"], h, cfg),
+                               cfg, positions=positions, causal=False)
+            h = h + a
+            h = h + apply_mlp(lp["channel"], apply_norm(lp["norm2"], h, cfg),
+                              cfg)
+            return h, None
+
+        if remat:
+            body = jax.checkpoint(body, policy=_remat_policy(remat))
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+        return apply_norm(params["enc_norm"], x, cfg)
+
+    # -- decoder (teacher-forced training) ------------------------------------------
+    def decode_train(self, params: Params, tokens: jax.Array,
+                     enc: jax.Array, remat: bool = False
+                     ) -> jax.Array:
+        cfg = self.cfg
+        dtc = jnp.dtype(cfg.compute_dtype)
+        x = embed_tokens(params["embed"], tokens, cfg)
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(dtc)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+        def body(h, lp):
+            a = full_attention(lp["self"], apply_norm(lp["norm1"], h, cfg),
+                               cfg, positions=positions, causal=True)
+            h = h + a
+            c = full_attention(lp["cross"], apply_norm(lp["norm_x"], h, cfg),
+                               cfg, positions=positions, causal=False,
+                               kv_states=enc)
+            h = h + c
+            h = h + apply_mlp(lp["channel"], apply_norm(lp["norm2"], h, cfg),
+                              cfg)
+            return h, None
+
+        if remat:
+            body = jax.checkpoint(body, policy=_remat_policy(remat))
+        x, _ = jax.lax.scan(body, x, params["decoder"])
+        return apply_norm(params["final_norm"], x, cfg)
+
+    def loss(self, params: Params, batch: dict, *, remat: bool = False
+             ) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        enc = self.encode(params, batch["frame_embeds"], remat=remat)
+        h = self.decode_train(params, batch["tokens"], enc, remat=remat)
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones(batch["labels"].shape, jnp.float32)
+        head_w = (params["embed"]["tokens"].T if cfg.tie_embeddings
+                  else params["embed"]["lm_head"])
+        xent = chunked_xent(h, head_w, batch["labels"], mask, cfg)
+        return xent, {"xent": xent, "aux": jnp.float32(0.0)}
+
+    # -- serving -----------------------------------------------------------------
+    def init_decode_state(self, batch: int, max_len: int,
+                          cross_len: int = 1024) -> Params:
+        cfg = self.cfg
+
+        def one(_):
+            return {"self": init_kv_cache(cfg, batch, max_len),
+                    "cross": init_kv_cache(cfg, batch, cross_len)}
+
+        return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+    def prefill_cross(self, params: Params, state: Params,
+                      frames: jax.Array) -> Params:
+        """Run the encoder and fill the cross-attention caches."""
+        cfg = self.cfg
+        enc = self.encode(params, frames)
+
+        def per_layer(lp, _):
+            return precompute_cross_kv(lp["cross"], enc, cfg)
+
+        cross = jax.lax.map(lambda lp: per_layer(lp, None), params["decoder"])
+        return {"self": state["self"], "cross": cross}
+
+    def decode_step(self, params: Params, state: Params, tokens: jax.Array,
+                    pos: jax.Array) -> tuple[jax.Array, Params]:
+        cfg = self.cfg
+        dtc = jnp.dtype(cfg.compute_dtype)
+        x = embed_tokens(params["embed"], tokens, cfg)
+        pos_emb = sinusoidal_positions(cfg.decoder_len + 1, cfg.d_model)
+        x = x + jax.lax.dynamic_slice_in_dim(
+            pos_emb, jnp.minimum(pos, pos_emb.shape[0] - 1), 1, axis=0
+        ).astype(dtc)
+
+        def body(h, scanned):
+            lp, ls = scanned
+            a, self_cache = decode_attention(
+                lp["self"], apply_norm(lp["norm1"], h, cfg), ls["self"], cfg,
+                pos=pos)
+            h = h + a
+            c, _ = decode_attention(
+                lp["cross"], apply_norm(lp["norm_x"], h, cfg), ls["cross"],
+                cfg, pos=pos, cross=True)
+            h = h + c
+            h = h + apply_mlp(lp["channel"], apply_norm(lp["norm2"], h, cfg),
+                              cfg)
+            return h, {"self": self_cache, "cross": ls["cross"]}
+
+        x, new_state = jax.lax.scan(body, x, (params["decoder"], state))
+        x = apply_norm(params["final_norm"], x, cfg)
+        head_w = (params["embed"]["tokens"].T if cfg.tie_embeddings
+                  else params["embed"]["lm_head"])
+        logits = (x.astype(dtc) @ head_w.astype(dtc)).astype(jnp.float32)
+        return constrain(logits, "batch", None, "vocab"), new_state

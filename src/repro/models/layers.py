@@ -1,0 +1,177 @@
+"""Shared building blocks: initializers, norms, RoPE, MLPs, embeddings.
+
+Everything is functional: ``init_*`` builds a parameter pytree from a PRNG
+key, ``apply``-style functions are pure.  Compute runs in
+``cfg.compute_dtype`` (bf16 on TPU); parameters live in ``cfg.param_dtype``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from ..dist.api import constrain
+from .config import ArchConfig
+
+Params = dict[str, Any]
+
+
+def chunked_scan(step, carry, xs, chunk: int, remat: bool = True):
+    """``lax.scan`` over time in remat'd chunks.
+
+    Backward memory for a plain scan is O(T x per-step residuals); chunking
+    saves the carry only at T/chunk boundaries and rematerialises inside a
+    chunk — O(T/L x carry + L x residuals), the standard SSM/linear-attn
+    training layout (and how the Pallas kernels block the recurrences).
+
+    xs leaves have leading dim T (divisible by ``chunk``); returns
+    (final_carry, ys) with ys leading dim T.
+    """
+    t = jax.tree.leaves(xs)[0].shape[0]
+    chunk = min(chunk, t)
+    while t % chunk:
+        chunk -= 1
+    n = t // chunk
+    xs_c = jax.tree.map(lambda a: a.reshape(n, chunk, *a.shape[1:]), xs)
+
+    def chunk_body(c, x):
+        return jax.lax.scan(step, c, x)
+
+    if remat:
+        chunk_body = jax.checkpoint(
+            chunk_body, policy=jax.checkpoint_policies.nothing_saveable)
+    carry, ys = jax.lax.scan(chunk_body, carry, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape(t, *a.shape[2:]), ys)
+    return carry, ys
+
+
+# -- initializers -------------------------------------------------------------
+
+def dense_init(key, shape, dtype, in_axis: int = 0) -> jax.Array:
+    """Truncated-normal fan-in initializer (std = 1/sqrt(fan_in))."""
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else 1
+    std = fan_in ** -0.5
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# -- norms --------------------------------------------------------------------
+
+def init_norm(cfg: ArchConfig, with_bias: bool | None = None) -> Params:
+    bias = cfg.norm_type == "layernorm" if with_bias is None else with_bias
+    p: Params = {"scale": jnp.ones((cfg.d_model,), cfg.param_dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((cfg.d_model,), cfg.param_dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm" and "bias" not in p:
+        inv = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True)
+                            + cfg.norm_eps)
+        out = x32 * inv * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+        out = (x32 - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * p["scale"].astype(jnp.float32)
+        if "bias" in p:
+            out = out + p["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def group_norm(x: jax.Array, n_groups: int, eps: float = 64e-5) -> jax.Array:
+    """GroupNorm over the last dim (RWKV's per-head wkv normalisation)."""
+    dt = x.dtype
+    shape = x.shape
+    x32 = x.astype(jnp.float32).reshape(*shape[:-1], n_groups, -1)
+    mu = x32.mean(axis=-1, keepdims=True)
+    var = jnp.square(x32 - mu).mean(axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return out.reshape(shape).astype(dt)
+
+
+# -- rotary embeddings ----------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    dt = x.dtype
+    freqs = rope_frequencies(x.shape[-1], theta)          # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                # (..., T, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def sinusoidal_positions(n_pos: int, d_model: int) -> jax.Array:
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    angle = pos / (10_000.0 ** (2 * dim / d_model))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# -- MLPs --------------------------------------------------------------------
+
+def init_mlp(key, cfg: ArchConfig, d_ff: int | None = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 3)
+    p: Params = {"w_in": dense_init(ks[0], (d, d_ff), dt),
+                 "w_out": dense_init(ks[1], (d_ff, d), dt)}
+    if cfg.mlp_type == "swiglu":
+        p["w_gate"] = dense_init(ks[2], (d, d_ff), dt)
+    return p
+
+
+def apply_mlp(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = x.astype(dt)
+    mid = [None] * (x.ndim - 2)
+    h = x @ p["w_in"].astype(dt)
+    h = checkpoint_name(constrain(h, "batch", *mid, "ff"), "mlp_hidden")
+    if cfg.mlp_type == "swiglu":
+        g = x @ p["w_gate"].astype(dt)
+        h = jax.nn.silu(g) * h
+    elif cfg.mlp_type == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    elif cfg.mlp_type == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(cfg.mlp_type)
+    out = h @ p["w_out"].astype(dt)
+    return constrain(out, "batch", *(["seq"] if x.ndim == 3 else mid), None)
+
+
+# -- embeddings & heads ---------------------------------------------------------
+
+def init_embed(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    p: Params = {"tokens": embed_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                                      cfg.param_dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size),
+                                  cfg.param_dtype)
+    return p
+
+
+def embed_tokens(p: Params, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    emb = p["tokens"].astype(jnp.dtype(cfg.compute_dtype))
+    out = jnp.take(emb, tokens, axis=0)
+    return constrain(out, "batch", "seq", None)

@@ -1,0 +1,201 @@
+"""RWKV-6 "Finch" mixer: data-dependent token-shift (ddlerp), data-dependent
+per-channel decay, and the wkv matrix-state recurrence.
+
+Training runs the wkv recurrence as a ``lax.scan`` carrying the per-head
+(hd x hd) state in fp32 — the XLA reference.  The chunked Pallas kernel
+(``repro.kernels.rwkv6_wkv``) implements the same recurrence blockwise in
+VMEM for the TPU target and is validated against this math via ``ref.py``.
+
+Per head h with state S in R^{hd x hd} (key-dim x value-dim):
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+with w_t = exp(-exp(decay_t)) computed per channel from the token stream
+(the "data-dependent decay" that distinguishes RWKV-6 from RWKV-4/5).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.api import constrain
+from .config import ArchConfig, RwkvConfig
+from .layers import chunked_scan, dense_init, group_norm
+
+Params = dict[str, Any]
+
+_MIX_NAMES = ("r", "k", "v", "g", "w")
+
+
+def _rcfg(cfg: ArchConfig) -> RwkvConfig:
+    return cfg.rwkv or RwkvConfig()
+
+
+def n_rwkv_heads(cfg: ArchConfig) -> int:
+    return cfg.d_model // _rcfg(cfg).head_dim
+
+
+def init_rwkv_tmix(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    r = _rcfg(cfg)
+    h = n_rwkv_heads(cfg)
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 12)
+    return {
+        "mu_base": (jax.random.uniform(ks[0], (d,)) * 0.5).astype(dt),
+        "mix_lora_a": dense_init(ks[1], (d, 5 * r.lora_rank_mix), dt),
+        "mix_lora_b": (jax.random.normal(ks[2], (5, r.lora_rank_mix, d))
+                       * 0.01).astype(dt),
+        "mu": (jax.random.uniform(ks[3], (5, d)) * 0.5).astype(dt),
+        "decay_base": jnp.zeros((d,), jnp.float32) - 4.0,
+        "decay_lora_a": dense_init(ks[4], (d, r.lora_rank_decay), dt),
+        "decay_lora_b": (jax.random.normal(ks[5], (r.lora_rank_decay, d))
+                         * 0.01).astype(dt),
+        "wr": dense_init(ks[6], (d, d), dt),
+        "wk": dense_init(ks[7], (d, d), dt),
+        "wv": dense_init(ks[8], (d, d), dt),
+        "wg": dense_init(ks[9], (d, d), dt),
+        "wo": dense_init(ks[10], (d, d), dt),
+        "u": (jax.random.normal(ks[11], (h, r.head_dim)) * 0.1).astype(
+            jnp.float32),
+        "ln_scale": jnp.ones((d,), dt),
+        "ln_bias": jnp.zeros((d,), dt),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """x_{t-1} stream; ``prev`` is the last token of the previous segment."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: Params, x: jax.Array, shifted: jax.Array, cfg: ArchConfig):
+    """Data-dependent interpolation producing the 5 mixed streams."""
+    dtc = jnp.dtype(cfg.compute_dtype)
+    dx = (shifted - x).astype(dtc)
+    base = x.astype(dtc) + dx * p["mu_base"].astype(dtc)
+    lora = jnp.tanh(base @ p["mix_lora_a"].astype(dtc))      # (B,T,5R)
+    lora = lora.reshape(*lora.shape[:-1], 5, -1)
+    adj = jnp.einsum("btfr,frd->btfd", lora, p["mix_lora_b"].astype(dtc))
+    mixes = p["mu"].astype(dtc) + adj                         # (B,T,5,D)
+    return [x.astype(dtc) + dx * mixes[..., i, :] for i in range(5)]
+
+
+def wkv_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, s0: jax.Array | None = None
+             ) -> tuple[jax.Array, jax.Array]:
+    """Reference wkv recurrence.
+
+    r,k,v,w: (B, T, H, hd) fp32 (w already as multiplicative decay in (0,1));
+    u: (H, hd); s0: (B, H, hd, hd).  Returns (y (B,T,H,hd), s_T).
+    """
+    b, t, h, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                              # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]            # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[..., :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    s, ys = chunked_scan(step, s0,
+                         (r.swapaxes(0, 1), k.swapaxes(0, 1),
+                          v.swapaxes(0, 1), w.swapaxes(0, 1)), chunk=64)
+    return ys.swapaxes(0, 1), s
+
+
+def apply_rwkv_tmix(p: Params, x: jax.Array, cfg: ArchConfig,
+                    state: Params | None = None,
+                    return_state: bool = False
+                    ) -> tuple[jax.Array, Params | None]:
+    """Time-mix over a full segment. x: (B, T, D)."""
+    b, t, d = x.shape
+    hd = _rcfg(cfg).head_dim
+    h = n_rwkv_heads(cfg)
+    dtc = jnp.dtype(cfg.compute_dtype)
+    prev = state["tmix_prev"][:, None] if state is not None else None
+    shifted = _token_shift(x, prev)
+    xr, xk, xv, xg, xw = _ddlerp(p, x, shifted, cfg)
+
+    r = (xr @ p["wr"].astype(dtc)).reshape(b, t, h, hd)
+    k = (xk @ p["wk"].astype(dtc)).reshape(b, t, h, hd)
+    v = (xv @ p["wv"].astype(dtc)).reshape(b, t, h, hd)
+    g = xg @ p["wg"].astype(dtc)
+    r = constrain(r, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+    v = constrain(v, "batch", None, "heads", None)
+
+    decay = (p["decay_base"]
+             + (jnp.tanh(xw @ p["decay_lora_a"].astype(dtc))
+                @ p["decay_lora_b"].astype(dtc)).astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(decay)).reshape(b, t, h, hd)
+
+    if cfg.attn_impl == "pallas":
+        from ..kernels.rwkv6_wkv import ops as wkv_ops
+        s0 = state["wkv"] if state is not None else None
+        y, s_t = wkv_ops.wkv6(r.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), w, p["u"], s0)
+    else:
+        s0 = state["wkv"] if state is not None else None
+        y, s_t = wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32), w, p["u"], s0)
+
+    y = group_norm(y.reshape(b, t, d), h)
+    y = y * p["ln_scale"].astype(y.dtype) + p["ln_bias"].astype(y.dtype)
+    out = (y.astype(dtc) * jax.nn.silu(g)) @ p["wo"].astype(dtc)
+    out = constrain(out, "batch", "seq", None)
+    new_state = None
+    if state is not None or return_state:
+        new_state = {"tmix_prev": x[:, -1], "wkv": s_t}
+    return out, new_state
+
+
+# -- channel mix ----------------------------------------------------------------
+
+def init_rwkv_cmix(key, cfg: ArchConfig) -> Params:
+    d, dt = cfg.d_model, cfg.param_dtype
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": (jax.random.uniform(ks[0], (d,)) * 0.5).astype(dt),
+        "mu_r": (jax.random.uniform(ks[0], (d,)) * 0.5).astype(dt),
+        "wk_ff": dense_init(ks[1], (d, cfg.d_ff), dt),
+        "wv_ff": dense_init(ks[2], (cfg.d_ff, d), dt),
+        "wr_ff": dense_init(ks[0], (d, d), dt),
+    }
+
+
+def apply_rwkv_cmix(p: Params, x: jax.Array, cfg: ArchConfig,
+                    state: Params | None = None,
+                    return_state: bool = False
+                    ) -> tuple[jax.Array, Params | None]:
+    dtc = jnp.dtype(cfg.compute_dtype)
+    prev = state["cmix_prev"][:, None] if state is not None else None
+    shifted = _token_shift(x, prev)
+    dx = (shifted - x).astype(dtc)
+    xk = x.astype(dtc) + dx * p["mu_k"].astype(dtc)
+    xr = x.astype(dtc) + dx * p["mu_r"].astype(dtc)
+    k = jnp.square(jax.nn.relu(xk @ p["wk_ff"].astype(dtc)))
+    k = constrain(k, "batch", None, "ff")
+    vv = k @ p["wv_ff"].astype(dtc)
+    r = jax.nn.sigmoid(xr @ p["wr_ff"].astype(dtc))
+    out = constrain(r * vv, "batch", "seq", None)
+    new_state = ({"cmix_prev": x[:, -1]}
+                 if (state is not None or return_state) else None)
+    return out, new_state
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int) -> Params:
+    hd = _rcfg(cfg).head_dim
+    h = n_rwkv_heads(cfg)
+    return {
+        "tmix_prev": jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.compute_dtype)),
+        "cmix_prev": jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.compute_dtype)),
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+    }

@@ -1,0 +1,147 @@
+"""AdamW from scratch, with optionally int8 block-quantized moments.
+
+Large-model memory budgeting on 256 chips (EXPERIMENTS.md §Dry-run) needs
+the optimizer to cost ~2 bytes/param instead of 8: moments are stored as
+int8 with per-block absmax scales and dequantized on the fly inside the
+(fully sharded) update.  Quantization blocks run along the LAST parameter
+axis (padded to a block multiple) so the quantized state carries exactly
+the parameter's sharding spec — no per-step resharding collectives.
+fp32 moments remain the default for convergence-sensitive runs.
+
+The update is standard decoupled-weight-decay Adam with global-norm
+gradient clipping and bias correction.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+BLOCK = 256
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float | Callable[[jax.Array], jax.Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moments_dtype: str = "float32"   # "float32" | "int8"
+
+    def lr_at(self, step: jax.Array) -> jax.Array:
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.float32(self.learning_rate)
+
+
+# -- int8 block quantization (last-axis blocks, sharding-aligned) ---------------
+#
+# First moment m (signed): linear absmax blocks.  Second moment v (>= 0)
+# feeds a DIVISION, so linear quantization is catastrophic (small entries
+# in a block with one large entry collapse to 0 -> update = m/eps); v is
+# quantized LOGARITHMICALLY instead, giving bounded multiplicative error.
+
+def quantize_moment(x: jax.Array, log: bool = False) -> dict:
+    last = x.shape[-1] if x.ndim else 1
+    xe = x.reshape(x.shape or (1,))
+    pad = (-last) % BLOCK
+    if pad:
+        xe = jnp.pad(xe, [(0, 0)] * (xe.ndim - 1) + [(0, pad)])
+    blocks = xe.reshape(*xe.shape[:-1], -1, BLOCK)
+    if log:
+        # floor must stay in the fp32 NORMAL range: XLA flushes subnormals
+        # to zero and log2(0) = -inf poisons the whole block
+        l = jnp.log2(jnp.maximum(blocks, 1e-30))
+        lmin = l.min(axis=-1)
+        lmax = l.max(axis=-1)
+        scale = jnp.maximum((lmax - lmin) / 254.0, 1e-9)          # (..., nb)
+        q = jnp.round((l - lmin[..., None]) / scale[..., None]) - 127.0
+        return {"q": q.reshape(xe.shape).astype(jnp.int8),
+                "scale": scale.astype(jnp.float32),
+                "minv": lmin.astype(jnp.float32)}
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0             # (..., nb)
+    q = jnp.round(blocks / jnp.maximum(scale[..., None], 1e-20))
+    return {"q": q.reshape(xe.shape).astype(jnp.int8),
+            "scale": scale.astype(jnp.float32)}
+
+
+def dequantize_moment(d: dict, shape: tuple) -> jax.Array:
+    q = d["q"].astype(jnp.float32)
+    blocks = q.reshape(*q.shape[:-1], -1, BLOCK)
+    if "minv" in d:
+        l = d["minv"][..., None] + (blocks + 127.0) * d["scale"][..., None]
+        blocks = jnp.exp2(l)
+        blocks = jnp.where(l <= -95.0, 0.0, blocks)
+    else:
+        blocks = blocks * d["scale"][..., None]
+    flat = blocks.reshape(q.shape)
+    last = shape[-1] if shape else 1
+    out = flat[..., :last]
+    return out.reshape(shape)
+
+
+def _moment_zeros(p: jax.Array, dtype: str, log: bool = False):
+    if dtype == "int8":
+        return quantize_moment(jnp.zeros(p.shape, jnp.float32), log=log)
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+# -- optimizer ------------------------------------------------------------------
+
+def init_opt_state(params: Params, cfg: AdamWConfig) -> dict:
+    return {
+        "m": jax.tree.map(lambda p: _moment_zeros(p, cfg.moments_dtype),
+                          params),
+        "v": jax.tree.map(lambda p: _moment_zeros(p, cfg.moments_dtype,
+                                                  log=True), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Params) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def apply_updates(params: Params, grads: Params, state: dict,
+                  cfg: AdamWConfig) -> tuple[Params, dict]:
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip > 0 else jnp.float32(1.0)
+    lr = cfg.lr_at(count)
+    bc1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    quant = cfg.moments_dtype == "int8"
+
+    def update_leaf(p, g, m, v):
+        g32 = g.astype(jnp.float32) * clip
+        m32 = dequantize_moment(m, p.shape) if quant else m
+        v32 = dequantize_moment(v, p.shape) if quant else v
+        m32 = cfg.b1 * m32 + (1.0 - cfg.b1) * g32
+        v32 = cfg.b2 * v32 + (1.0 - cfg.b2) * jnp.square(g32)
+        upd = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0  # no decay on norms
+        new_p = p.astype(jnp.float32) - lr * (upd + decay * p.astype(jnp.float32))
+        return (new_p.astype(p.dtype),
+                quantize_moment(m32) if quant else m32,
+                quantize_moment(v32, log=True) if quant else v32)
+
+    p_leaves, tdef = jax.tree.flatten(params)
+    g_leaves = tdef.flatten_up_to(grads)
+    m_leaves = tdef.flatten_up_to(state["m"])
+    v_leaves = tdef.flatten_up_to(state["v"])
+    out = [update_leaf(p, g, m, v)
+           for p, g, m, v in zip(p_leaves, g_leaves, m_leaves, v_leaves)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "count": count}

@@ -1,0 +1,191 @@
+"""Partitioned-HLO collective census with while-loop trip accounting.
+
+Parses ``compiled.as_text()`` (post-SPMD, per-device shapes) and sums the
+bytes moved by every collective, using ring-transfer models:
+
+  all-gather / reduce-scatter   bytes * (g-1)/g     per device
+  all-reduce                    2 * bytes * (g-1)/g (RS + AG)
+  all-to-all                    bytes * (g-1)/g
+  collective-permute            bytes
+
+``cost_analysis`` counts a scan body once, and so does a naive text scan —
+so this census builds the while-loop nesting tree (body/cond computation
+names), parses each loop's trip count from its canonical condition
+(compare against a constant), and weights every computation's collectives
+by the product of enclosing trip counts.  The result is the true
+per-device, per-step collective traffic.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_OP_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_TUPLE_OP_RE = re.compile(
+    r"=\s*\((.*?)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_WHILE_RE = re.compile(r"\bwhile\(")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COMPARE_RE = re.compile(r"compare\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+@dataclass
+class _Comp:
+    name: str
+    lines: list = field(default_factory=list)
+    whiles: list = field(default_factory=list)  # (body, cond)
+    colls: dict = field(default_factory=lambda: defaultdict(
+        lambda: {"count": 0, "bytes": 0, "transfer_bytes": 0}))
+    const_ints: list = field(default_factory=list)
+    has_compare: bool = False
+
+
+def _parse_computations(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    current: _Comp | None = None
+    entry: str | None = None
+    for line in text.splitlines():
+        h = _HEADER_RE.match(line)
+        if h:
+            current = _Comp(h.group(1))
+            comps[current.name] = current
+            if line.lstrip().startswith("ENTRY"):
+                entry = current.name
+            continue
+        if current is None:
+            continue
+        current.lines.append(line)
+        if _WHILE_RE.search(line):
+            b = _BODY_RE.search(line)
+            c = _COND_RE.search(line)
+            if b:
+                current.whiles.append((b.group(1),
+                                       c.group(1) if c else None))
+        for m in _CONST_RE.finditer(line):
+            current.const_ints.append(int(m.group(1)))
+        if _COMPARE_RE.search(line):
+            current.has_compare = True
+        if "-done(" in line or "-done." in line:
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            kind = m.group(3)
+            nbytes = _shape_bytes(m.group(1), m.group(2))
+        else:
+            mt = _TUPLE_OP_RE.search(line)
+            if not mt:
+                continue
+            kind = mt.group(2)
+            nbytes = sum(_shape_bytes(d, s)
+                         for d, s in _SHAPE_RE.findall(mt.group(1)))
+        g = _group_size(line)
+        if kind in ("all-gather", "reduce-scatter", "all-to-all"):
+            transfer = nbytes * (g - 1) // max(g, 1)
+        elif kind == "all-reduce":
+            transfer = 2 * nbytes * (g - 1) // max(g, 1)
+        else:
+            transfer = nbytes
+        current.colls[kind]["count"] += 1
+        current.colls[kind]["bytes"] += nbytes
+        current.colls[kind]["transfer_bytes"] += transfer
+    comps["__entry__"] = comps.get(entry, _Comp("__missing__"))
+    return comps
+
+
+def _trip_count(comps: dict[str, _Comp], cond_name: str | None) -> int:
+    """Trip count from a canonical scan condition (compare vs constant).
+
+    The compare itself may be wrapped in a fusion on some backends, so the
+    signal is just the loop-bound constant in the condition body (max, to
+    skip init-value constants in canonical scans)."""
+    if cond_name is None or cond_name not in comps:
+        return 1
+    cond = comps[cond_name]
+    if not cond.const_ints:
+        return 1
+    return max(cond.const_ints)
+
+
+def collective_census(hlo_text: str) -> dict:
+    """Trip-weighted per-device collective census.
+
+    Returns per-kind {count, bytes, transfer_bytes} both raw (one visit per
+    computation) and trip-weighted, plus the loop tree that produced the
+    weights.
+    """
+    comps = _parse_computations(hlo_text)
+    entry = comps["__entry__"]
+
+    weights: dict[str, float] = defaultdict(float)
+    loop_tree: list = []
+
+    def visit(comp: _Comp, mult: float, depth: int):
+        weights[comp.name] += mult
+        for body, cond in comp.whiles:
+            trips = _trip_count(comps, cond)
+            loop_tree.append({"body": body, "trips": trips, "depth": depth,
+                              "outer_mult": mult})
+            if body in comps:
+                visit(comps[body], mult * trips, depth + 1)
+
+    visit(entry, 1.0, 0)
+
+    weighted = {k: {"count": 0.0, "bytes": 0.0, "transfer_bytes": 0.0}
+                for k in COLLECTIVES}
+    raw = {k: {"count": 0, "bytes": 0, "transfer_bytes": 0}
+           for k in COLLECTIVES}
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        w = weights.get(name, 0.0)
+        for kind, st in comp.colls.items():
+            for f in ("count", "bytes", "transfer_bytes"):
+                raw[kind][f] += st[f]
+                if w:
+                    weighted[kind][f] += st[f] * w
+    total_weighted = sum(v["transfer_bytes"] for v in weighted.values())
+    return {
+        "weighted": weighted,
+        "raw": raw,
+        "transfer_bytes_per_step": total_weighted,
+        "loops": loop_tree,
+    }

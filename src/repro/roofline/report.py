@@ -1,0 +1,86 @@
+"""Roofline report generator: dryrun.json + analytic ledger -> §Roofline.
+
+Per (arch x cell) on the single-pod mesh:
+  compute/memory/collective terms (seconds), dominant term, MODEL_FLOPS,
+  MODEL_FLOPS/ledger-FLOPs ratio, mfu bound, and a one-line lever note.
+
+Usage:  PYTHONPATH=src python -m repro.roofline.report [--json results/dryrun.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from .. import configs
+from ..launch import policies, shapes
+from . import analysis
+
+LEVERS = {
+    "compute_s": "already compute-bound: raise MFU via kernel fusion "
+                 "(flash attention / fused scans) and drop remat recompute",
+    "memory_s": "cut HBM traffic: larger microbatches amortise weight "
+                "reads; selective remat; bf16 activations end-to-end",
+    "collective_s": "shrink wire bytes: wider data axis vs model axis, "
+                    "int8 gradient all-reduce, overlap FSDP gathers with "
+                    "compute",
+}
+
+
+def build_rows(dryrun_path: Path, mesh_name: str = "single") -> list[dict]:
+    records = json.loads(Path(dryrun_path).read_text())
+    rows = []
+    for rec in records:
+        if rec.get("mesh") != mesh_name or not rec.get("ok"):
+            continue
+        cfg0 = configs.get(rec["arch"])
+        cell = shapes.SHAPE_CELLS[rec["cell"]]
+        cfg = policies.arch_for_cell(cfg0, cell)
+        scfg = policies.default_sharding(cfg, cell)
+        n_chips = rec["n_devices"]
+        ledger = analysis.analytic_cost(cfg, cell, scfg, n_chips=n_chips)
+        coll = rec["collectives"]["transfer_bytes_per_step"]
+        terms = analysis.roofline_terms(ledger, coll, n_chips)
+        rows.append({
+            "arch": rec["arch"], "cell": rec["cell"], "n_chips": n_chips,
+            "peak_gb": rec["memory"]["peak_per_device_gb"],
+            "xla_flops_raw": rec["cost_analysis"]["flops"],
+            **{k: terms[k] for k in
+               ("compute_s", "memory_s", "collective_s", "dominant",
+                "step_time_bound_s", "roofline_fraction", "model_flops",
+                "hlo_flops", "useful_flops_ratio", "mfu_bound")},
+            "lever": LEVERS[terms["dominant"]],
+        })
+    return rows
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | cell | compute s | memory s | collective s | dominant "
+           "| bound s | MFU bound | useful-FLOP ratio | peak GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | {r['compute_s']:.4f} "
+            f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+            f"| {r['dominant'].replace('_s','')} "
+            f"| {r['step_time_bound_s']:.4f} | {r['mfu_bound']*100:.1f}% "
+            f"| {r['useful_flops_ratio']:.2f} | {r['peak_gb']:.1f} |")
+    return hdr + "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    root = Path(__file__).resolve().parents[3]
+    ap.add_argument("--json", default=str(root / "results" / "dryrun.json"))
+    ap.add_argument("--out", default=str(root / "results" / "roofline.json"))
+    args = ap.parse_args()
+    rows = build_rows(Path(args.json))
+    Path(args.out).write_text(json.dumps(rows, indent=1))
+    print(to_markdown(rows))
+    print(f"\n{len(rows)} cells -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

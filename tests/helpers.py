@@ -1,0 +1,32 @@
+"""Shared test helpers."""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 600) -> str:
+    """Run python ``code`` in a fresh process with N host platform devices.
+
+    Multi-device tests must not pollute the main pytest process (jax locks
+    device count at first init), so they run isolated.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
+                        + env.get("XLA_FLAGS", "").replace(
+                            "--xla_force_host_platform_device_count=512", ""))
+    env["PYTHONPATH"] = f"{SRC}:{env.get('PYTHONPATH', '')}"
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed ({proc.returncode}):\n--- stdout ---\n"
+            f"{proc.stdout}\n--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc.stdout

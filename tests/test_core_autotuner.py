@@ -1,0 +1,111 @@
+"""End-to-end reproduction of the paper's Results 1-5 (banded asserts)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Autotuner, DATASETS_GB, EmilPlatformModel,
+                        fit_emil_surrogates, paper_space, percent_error)
+
+GB = DATASETS_GB["human"]
+
+
+@pytest.fixture(scope="module")
+def platform():
+    return EmilPlatformModel()
+
+
+@pytest.fixture(scope="module")
+def surrogate(platform):
+    sur, n, ev = fit_emil_surrogates(
+        platform, GB, datasets_gb=list(DATASETS_GB.values()),
+        n_estimators=80, return_eval=True, seed=0)
+    return sur, n, ev
+
+
+def test_result1_prediction_matches_measurement(surrogate):
+    _, n_train, ev = surrogate
+    assert n_train == 7200                      # paper's experiment count
+    for side, bound in (("host", 8.0), ("device", 8.0)):
+        _, y, yp = ev[side]
+        assert percent_error(y, yp).mean() < bound
+
+
+def test_result2_absolute_errors_low(surrogate):
+    _, _, ev = surrogate
+    _, y_host, yp_host = ev["host"]
+    _, y_dev, yp_dev = ev["device"]
+    # paper: avg abs err 0.027 s (host), 0.074 s (device); allow 4x slack
+    assert np.abs(y_host - yp_host).mean() < 0.11
+    assert np.abs(y_dev - yp_dev).mean() < 0.30
+
+
+@pytest.fixture(scope="module")
+def tuner(platform, surrogate):
+    sur, n_train, _ = surrogate
+    space = paper_space(workload_step=10)       # keep EM tractable in tests
+    rng = np.random.default_rng(0)
+    return Autotuner(
+        space,
+        measure=lambda c: platform.energy(c, GB, rng),
+        truth=lambda c: platform.energy(c, GB, None),
+        surrogate=sur, n_training_experiments=n_train)
+
+
+@pytest.fixture(scope="module")
+def em_report(tuner):
+    return tuner.tune_em()
+
+
+def test_em_finds_hetero_optimum(em_report):
+    cfg = em_report.best_config
+    # paper Fig. 2b: large inputs favour a 50-75 % host share with max threads
+    assert 40 <= cfg["host_fraction"] <= 80
+    assert cfg["host_threads"] >= 24
+    assert cfg["device_threads"] >= 120
+
+
+def test_result3_saml_close_to_em_at_5pct_budget(tuner, em_report):
+    saml = tuner.tune_saml(iterations=1000, seed=1,
+                           checkpoints=(250, 500, 750, 1000))
+    # effort: SAML performs ZERO search measurements
+    assert saml.n_experiments == 0
+    assert saml.n_predictions >= 1000
+    diff = 100 * (saml.best_energy_measured - em_report.best_energy_measured) \
+        / em_report.best_energy_measured
+    assert diff < 12.0                            # paper: ~10 % at 1000 iters
+
+
+def test_result4_checkpoint_differences_decrease(tuner, em_report):
+    saml = tuner.tune_saml(iterations=1000, seed=2,
+                           checkpoints=(250, 500, 750, 1000))
+    best = em_report.best_energy_measured
+    diffs = [100 * (saml.checkpoints[i][0] - best) / best
+             for i in (250, 500, 750, 1000)]
+    assert diffs[-1] <= diffs[0] + 1e-9
+    assert diffs[-1] < 15.0
+
+
+def test_result5_speedups(platform, tuner):
+    saml = tuner.tune_saml(iterations=1000, seed=3, checkpoints=(1000,))
+    e = saml.checkpoints[1000][0]
+    sp_host = platform.host_only_time(GB) / e
+    sp_dev = platform.device_only_time(GB) / e
+    # paper: 1.74x vs host-only, 2.18x vs device-only @1000 iters
+    assert 1.45 <= sp_host <= 2.2
+    assert 1.8 <= sp_dev <= 2.7
+
+
+def test_sam_uses_measurements_not_predictions(tuner):
+    sam = tuner.tune_sam(iterations=120, seed=0)
+    assert sam.n_experiments > 0
+    assert sam.n_predictions == 0
+
+
+def test_eml_enumerates_predictions(platform, surrogate):
+    sur, n_train, _ = surrogate
+    space = paper_space(workload_step=25)
+    tuner = Autotuner(space, measure=lambda c: platform.energy(c, GB, None),
+                      surrogate=sur, n_training_experiments=n_train)
+    eml = tuner.tune_eml()
+    assert eml.n_predictions == space.size()
+    assert eml.n_experiments == 0

@@ -1,0 +1,74 @@
+"""Boosted decision-tree regression tests (fit quality, JAX predict parity)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BoostedTreesRegressor, absolute_error, percent_error
+from repro.core.bdtr import fit_tree
+
+
+def _synthetic(n=600, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(-2, 2, (n, 4))
+    y = (np.sin(X[:, 0] * 2) + 0.5 * X[:, 1] ** 2
+         + (X[:, 2] > 0) * X[:, 3] + 0.05 * rng.standard_normal(n))
+    return X, y
+
+
+def test_single_tree_reduces_sse():
+    X, y = _synthetic()
+    tree = fit_tree(X, y, max_depth=3)
+    pred = tree.predict(X)
+    sse_tree = np.sum((y - pred) ** 2)
+    sse_mean = np.sum((y - y.mean()) ** 2)
+    assert sse_tree < 0.6 * sse_mean
+
+
+def test_boosting_fits_nonlinear_function():
+    X, y = _synthetic()
+    Xev, yev = _synthetic(seed=1)
+    model = BoostedTreesRegressor(n_estimators=150, max_depth=4).fit(X, y)
+    pred = model.predict(Xev)
+    r2 = 1 - np.sum((yev - pred) ** 2) / np.sum((yev - yev.mean()) ** 2)
+    assert r2 > 0.9
+
+
+def test_jax_predict_matches_numpy():
+    X, y = _synthetic(n=300)
+    model = BoostedTreesRegressor(n_estimators=40, max_depth=3).fit(X, y)
+    f = model.predict_fn_jax()
+    np.testing.assert_allclose(np.asarray(f(X)), model.predict(X),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_boosting_monotone_train_error():
+    X, y = _synthetic(n=300)
+    errs = []
+    for m in (5, 20, 80):
+        model = BoostedTreesRegressor(n_estimators=m, max_depth=3).fit(X, y)
+        errs.append(np.mean((y - model.predict(X)) ** 2))
+    assert errs[0] > errs[1] > errs[2]
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_predictions_within_target_hull(seed):
+    """Tree ensembles cannot extrapolate beyond leaf means."""
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(0, 1, (100, 3))
+    y = rng.uniform(5, 6, 100)
+    model = BoostedTreesRegressor(n_estimators=30, max_depth=2).fit(X, y)
+    pred = model.predict(rng.uniform(-5, 5, (50, 3)))
+    assert np.all(np.isfinite(pred))
+    assert pred.min() >= y.min() - (y.max() - y.min())
+    assert pred.max() <= y.max() + (y.max() - y.min())
+
+
+def test_error_metrics_eqs_5_6():
+    t_meas = np.array([1.0, 2.0, 4.0])
+    t_pred = np.array([1.1, 1.8, 4.0])
+    np.testing.assert_allclose(absolute_error(t_meas, t_pred),
+                               [0.1, 0.2, 0.0])
+    np.testing.assert_allclose(percent_error(t_meas, t_pred),
+                               [10.0, 10.0, 0.0])

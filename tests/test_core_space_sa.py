@@ -1,0 +1,126 @@
+"""ConfigSpace + simulated annealing unit & property tests."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ConfigSpace, Param, SASchedule, paper_space, \
+    simulated_annealing, vectorized_sa
+
+
+def small_space():
+    return ConfigSpace([
+        Param("threads", (2, 4, 8, 16)),
+        Param("affinity", ("none", "scatter", "compact"), ordinal=False),
+        Param("fraction", tuple(range(0, 101, 10))),
+    ])
+
+
+def test_space_size_eq1():
+    s = small_space()
+    assert s.size() == 4 * 3 * 11          # paper Eq. 1: product of ranges
+    assert paper_space().size() == 7 * 9 * 3 * 3 * 101
+
+
+def test_enumerate_covers_space():
+    s = small_space()
+    all_cfgs = list(s.enumerate())
+    assert len(all_cfgs) == s.size()
+    assert len({tuple(c.values()) for c in all_cfgs}) == s.size()
+
+
+def test_index_codec_roundtrip():
+    s = small_space()
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        cfg = s.random(rng)
+        assert s.from_indices(s.to_indices(cfg)) == cfg
+
+
+def test_encoding_dims():
+    s = small_space()
+    assert s.feature_dim == 1 + 3 + 1       # ordinal, one-hot(3), ordinal
+    v = s.encode({"threads": 8, "affinity": "scatter", "fraction": 40})
+    assert v.tolist() == [8.0, 0.0, 1.0, 0.0, 40.0]
+
+
+@given(seed=st.integers(0, 10_000), n_moves=st.integers(1, 3))
+@settings(max_examples=50, deadline=None)
+def test_neighbor_always_valid(seed, n_moves):
+    s = small_space()
+    rng = np.random.default_rng(seed)
+    cfg = s.random(rng)
+    for _ in range(5):
+        cfg = s.neighbor(cfg, rng, n_moves=n_moves)
+        s.validate(cfg)                      # raises if invalid
+
+
+def test_neighbor_moves_one_param_locally():
+    s = small_space()
+    rng = np.random.default_rng(1)
+    cfg = {"threads": 8, "affinity": "none", "fraction": 50}
+    for _ in range(50):
+        nxt = s.neighbor(cfg, rng)
+        diffs = [k for k in cfg if cfg[k] != nxt[k]]
+        assert len(diffs) <= 1
+        if diffs == ["fraction"]:
+            assert abs(nxt["fraction"] - cfg["fraction"]) <= 20  # +-2 steps
+
+
+def test_schedule_for_iterations():
+    sch = SASchedule.for_iterations(1000)
+    assert abs(sch.n_iterations() - 1000) <= 1
+
+
+def _energy(cfg):
+    # discrete bowl with a unique minimum + affinity penalty
+    f = cfg["fraction"]
+    t = cfg["threads"]
+    aff = {"none": 0.3, "scatter": 0.0, "compact": 0.6}[cfg["affinity"]]
+    return (f - 60) ** 2 / 100.0 + (t - 16) ** 2 / 8.0 + aff
+
+
+def test_sa_finds_global_minimum():
+    s = small_space()
+    res = simulated_annealing(s, _energy, seed=3,
+                              schedule=SASchedule.for_iterations(1500))
+    assert res.best_config == {"threads": 16, "affinity": "scatter",
+                               "fraction": 60}
+    assert res.n_evaluations <= 1502
+
+
+def test_sa_accepts_better_always():
+    # from any state, proposing the optimum must always be accepted:
+    # energy decreases monotonically in best-so-far
+    s = small_space()
+    res = simulated_annealing(s, _energy, seed=0, record_history=True,
+                              schedule=SASchedule.for_iterations(300))
+    best = [row[2] for row in res.history]
+    assert all(b2 <= b1 for b1, b2 in zip(best, best[1:]))
+
+
+def test_sa_checkpoints_capture_best_so_far():
+    s = small_space()
+    res = simulated_annealing(s, _energy, seed=5, checkpoint_at=(50, 100, 200),
+                              schedule=SASchedule.for_iterations(250))
+    assert set(res.checkpoints) == {50, 100, 200}
+    es = [res.checkpoints[i][0] for i in (50, 100, 200)]
+    assert es[0] >= es[1] >= es[2]
+
+
+def test_vectorized_sa_matches_scalar_quality():
+    s = small_space()
+    import jax.numpy as jnp
+
+    def energy_jax(feats):  # feats: (n, 5) [threads, onehot3, fraction]
+        f = feats[:, 4]
+        t = feats[:, 0]
+        aff = feats[:, 1] * 0.3 + feats[:, 2] * 0.0 + feats[:, 3] * 0.6
+        return (f - 60) ** 2 / 100.0 + (t - 16) ** 2 / 8.0 + aff
+
+    res = vectorized_sa(s, energy_jax, n_chains=8, n_iterations=400, seed=0)
+    assert res.best_config == {"threads": 16, "affinity": "scatter",
+                               "fraction": 60}
+    assert res.n_evaluations == 8 * 401

@@ -1,0 +1,228 @@
+"""Per-kernel validation: shape/dtype sweeps + gradients vs pure-jnp oracles.
+
+All kernels run in interpret mode on CPU (the kernel body executes in
+Python) — the same code lowers to Mosaic on TPU.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.decode_attention import ops as da_ops, ref as da_ref
+from repro.kernels.rwkv6_wkv import ops as wkv_ops, ref as wkv_ref
+from repro.kernels.mamba_scan import ops as ms_ops, ref as ms_ref
+from repro.kernels.dna_automaton import kernel as dna_kernel
+from repro.kernels.dna_automaton import ops as dna_ops, ref as dna_ref
+
+RNG = np.random.default_rng(42)
+
+
+def _randn(*shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+# -- flash attention ------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,h,hd,causal,dtype", [
+    (2, 256, 4, 64, True, jnp.float32),
+    (1, 128, 2, 128, False, jnp.float32),
+    (2, 384, 3, 64, True, jnp.float32),
+    (1, 256, 2, 64, True, jnp.bfloat16),
+])
+def test_flash_attention_forward(b, t, h, hd, causal, dtype):
+    q, k, v = (_randn(b, t, h, hd, dtype=dtype) for _ in range(3))
+    out = fa_ops.flash_attention(q, k, v, causal=causal)
+    expect = fa_ref.attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_gradients():
+    q, k, v = (_randn(2, 256, 2, 64) for _ in range(3))
+
+    def f(impl):
+        def loss(q, k, v):
+            o = impl(q, k, v)
+            return (o.astype(jnp.float32) ** 2).sum()
+        return jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+    got = f(lambda q, k, v: fa_ops.flash_attention(q, k, v, causal=True))
+    want = f(lambda q, k, v: fa_ref.attention_ref(q, k, v, causal=True))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=5e-4, rtol=5e-4)
+
+
+def test_flash_attention_q_offset_prefill_continuation():
+    q, k, v = (_randn(1, 128, 2, 64) for _ in range(3))
+    k2, v2 = _randn(1, 256, 2, 64), _randn(1, 256, 2, 64)
+    out = fa_ops.flash_attention(q, k2, v2, causal=True, q_offset=128)
+    expect = fa_ref.attention_ref(q, k2, v2, causal=True, q_offset=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+# -- decode attention ------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,kv,rep,hd,length", [
+    (2, 1024, 4, 4, 64, 700),
+    (1, 512, 2, 8, 128, None),
+    (3, 256, 1, 4, 64, 100),
+    (2, 512, 8, 1, 64, 512),
+])
+def test_decode_attention(b, s, kv, rep, hd, length):
+    q = _randn(b, kv * rep, hd)
+    k = _randn(b, s, kv, hd)
+    v = _randn(b, s, kv, hd)
+    out = da_ops.decode_attention(q, k, v, length=length, block_s=128)
+    expect = da_ref.decode_attention_ref(q, k, v, length=length)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+# -- rwkv6 wkv --------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,h,hd,chunk", [
+    (2, 128, 2, 32, 32), (1, 96, 1, 64, 16), (2, 64, 4, 16, 64),
+])
+def test_wkv6_forward_and_state(b, t, h, hd, chunk):
+    r, k, v = (_randn(b, t, h, hd, scale=0.5) for _ in range(3))
+    w = jnp.asarray(jax.nn.sigmoid(RNG.standard_normal((b, t, h, hd)) + 2),
+                    jnp.float32)
+    u = _randn(h, hd, scale=0.1)
+    y, s = wkv_ops.wkv6(r, k, v, w, u, chunk=chunk)
+    ye, se = wkv_ref.wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), atol=2e-5,
+                               rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(se), atol=2e-5,
+                               rtol=2e-4)
+
+
+def test_wkv6_resume_state_equals_full_run():
+    """Processing [0:T/2] then [T/2:T] from the carried state == full run."""
+    b, t, h, hd = 1, 64, 2, 16
+    r, k, v = (_randn(b, t, h, hd, scale=0.5) for _ in range(3))
+    w = jnp.asarray(jax.nn.sigmoid(RNG.standard_normal((b, t, h, hd)) + 2),
+                    jnp.float32)
+    u = _randn(h, hd, scale=0.1)
+    y_full, s_full = wkv_ops.wkv6(r, k, v, w, u, chunk=16)
+    half = t // 2
+    y1, s1 = wkv_ops.wkv6(r[:, :half], k[:, :half], v[:, :half],
+                          w[:, :half], u, chunk=16)
+    y2, s2 = wkv_ops.wkv6(r[:, half:], k[:, half:], v[:, half:],
+                          w[:, half:], u, s0=s1, chunk=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_wkv6_gradients_match_ref():
+    b, t, h, hd = 1, 32, 1, 16
+    r, k, v = (_randn(b, t, h, hd, scale=0.5) for _ in range(3))
+    w = jnp.asarray(jax.nn.sigmoid(RNG.standard_normal((b, t, h, hd)) + 2),
+                    jnp.float32)
+    u = _randn(h, hd, scale=0.1)
+    g1 = jax.grad(lambda k: wkv_ops.wkv6(r, k, v, w, u, chunk=8)[0].sum())(k)
+    g2 = jax.grad(lambda k: wkv_ref.wkv6_ref(r, k, v, w, u)[0].sum())(k)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5,
+                               rtol=1e-4)
+
+
+# -- mamba selective scan -----------------------------------------------------------
+
+@pytest.mark.parametrize("bt,t,di,s,block_d,chunk", [
+    (2, 64, 128, 8, 64, 16), (1, 128, 64, 16, 64, 32), (3, 32, 96, 4, 32, 8),
+])
+def test_selective_scan(bt, t, di, s, block_d, chunk):
+    x = _randn(bt, t, di)
+    delta = jnp.abs(_randn(bt, t, di, scale=0.1))
+    a = -(jnp.abs(_randn(di, s)) + 0.5)
+    b = _randn(bt, t, s)
+    c = _randn(bt, t, s)
+    d = _randn(di)
+    y, h = ms_ops.selective_scan(x, delta, a, b, c, d, block_d=block_d,
+                                 chunk=chunk)
+    ye, he = ms_ref.selective_scan_ref(x, delta, a, b, c, d)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), atol=2e-5,
+                               rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(he), atol=2e-5,
+                               rtol=2e-4)
+
+
+def test_selective_scan_gradients():
+    bt, t, di, s = 1, 16, 32, 4
+    x = _randn(bt, t, di)
+    delta = jnp.abs(_randn(bt, t, di, scale=0.1))
+    a = -(jnp.abs(_randn(di, s)) + 0.5)
+    b, c = _randn(bt, t, s), _randn(bt, t, s)
+    d = _randn(di)
+    g1 = jax.grad(lambda x: ms_ops.selective_scan(
+        x, delta, a, b, c, d, block_d=32, chunk=8)[0].sum())(x)
+    g2 = jax.grad(lambda x: ms_ref.selective_scan_ref(
+        x, delta, a, b, c, d)[0].sum())(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5,
+                               rtol=1e-4)
+
+
+# -- DNA automaton -------------------------------------------------------------------
+
+def _random_text(n, planted, motif="ACGTAC", seed=0):
+    rng = np.random.default_rng(seed)
+    sym = {c: i for i, c in enumerate("ACGT")}
+    text = rng.integers(0, 4, n).astype(np.uint8)
+    for pos in planted:
+        text[pos:pos + len(motif)] = [sym[c] for c in motif]
+    return text
+
+
+@pytest.mark.parametrize("n,chunk", [(4096, 256), (10000, 512), (4096, 4096)])
+def test_fa_match_counts(n, chunk):
+    motif = "ACGTAC"
+    table, accept = dna_ops.build_motif_dfa(motif)
+    text = jnp.asarray(_random_text(n, [3, 100, 101, n - 10]))
+    got = int(dna_ops.fa_match(text, table, accept, chunk=chunk))
+    want = int(dna_ref.fa_match_ref(text, jnp.asarray(table),
+                                    jnp.asarray(accept))[0])
+    assert got == want >= 3
+
+
+def test_overlapping_motif_occurrences():
+    table, accept = dna_ops.build_motif_dfa("ACAC")
+    sym = {c: i for i, c in enumerate("ACGT")}
+    text = jnp.asarray(np.array([sym[c] for c in "ACACACACGG" + "GG" * 27],
+                                np.uint8))
+    got = int(dna_ops.fa_match(text, table, accept, chunk=16))
+    assert got == 3          # ACAC at 0, 2, 4 (overlaps count)
+
+
+@given(seed=st.integers(0, 1000), split=st.integers(1, 63))
+@settings(max_examples=20, deadline=None)
+def test_state_map_composition_property(seed, split):
+    """process(a+b) == compose(process(a), process(b)) — the associativity
+    that makes the workload divisible (the paper's core assumption)."""
+    table, _ = dna_ops.build_motif_dfa("ACGT")
+    table_j = jnp.asarray(table)
+    rng = np.random.default_rng(seed)
+    text = jnp.asarray(rng.integers(0, 4, 64).astype(np.uint8))
+    m_full = dna_ref.chunk_state_map_ref(text, table_j)
+    m_a = dna_ref.chunk_state_map_ref(text[:split], table_j)
+    m_b = dna_ref.chunk_state_map_ref(text[split:], table_j)
+    np.testing.assert_array_equal(np.asarray(m_full),
+                                  np.asarray(m_b)[np.asarray(m_a)])
+
+
+def test_state_map_kernel_matches_ref():
+    table, _ = dna_ops.build_motif_dfa("ACGTAC")
+    text = jnp.asarray(_random_text(2048, [7, 99]))
+    maps = dna_kernel.state_map_kernel(text, jnp.asarray(table), chunk=256,
+                                       interpret=True)
+    for i in range(maps.shape[0]):
+        want = dna_ref.chunk_state_map_ref(text[i * 256:(i + 1) * 256],
+                                           jnp.asarray(table))
+        np.testing.assert_array_equal(np.asarray(maps[i]), np.asarray(want))
