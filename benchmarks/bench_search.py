@@ -1,0 +1,209 @@
+"""Benchmark: seed scalar search path vs the batched/vectorized engine.
+
+Times three hot paths and writes the results as JSON (BENCH_search.json):
+
+  1. ``bdtr_fit``  — exact-splitter vs histogram-splitter BDTR fitting on
+     the paper's 7200-row Emil training grid (2880 host + 4320 device
+     rows), with held-out percent error for both, asserting the histogram
+     fit stays within a point of the exact one.
+  2. ``eml_sweep`` — full-space EML sweep: per-config Python loop
+     (``engine="scalar"``) vs one batched scoring pass
+     (``engine="batched"``); both must pick the same best config.
+  3. ``saml``      — 1000-iteration SAML: the paper's scalar chain vs the
+     jitted multi-chain vectorized engine (``engine="vectorized"``).
+     Total wall-clock (including jit compile) and steady-state (second
+     call) are reported separately.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_search.py [--quick] [--out PATH]
+
+``--quick`` shrinks the space/model so the whole script runs in well under
+a minute (CI smoke); the committed BENCH_search.json comes from a full run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (Autotuner, BoostedTreesRegressor, DATASETS_GB,
+                        EmilPlatformModel, emil_training_grids,
+                        fit_emil_surrogates, paper_space, percent_error)
+
+GB = DATASETS_GB["human"]
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return time.perf_counter() - t0, out
+
+
+def bench_bdtr_fit(n_estimators: int, max_depth: int = 5) -> dict:
+    """Exact vs hist boosting on the paper's host+device training grids
+    (the exact grids the shipped training path builds)."""
+    host, dev = emil_training_grids(
+        EmilPlatformModel(), datasets_gb=list(DATASETS_GB.values()), seed=0)
+    n_rows = len(host[1]) + len(dev[1])
+
+    out: dict = {"n_rows": n_rows, "n_estimators": n_estimators,
+                 "max_depth": max_depth, "pct_err": {}}
+    for method in ("exact", "hist"):
+        total = 0.0
+        errs = {}
+        for name, (X, y) in (("host", host), ("device", dev)):
+            # timing: fit on the full grid (the 7200 rows combined)
+            model = BoostedTreesRegressor(
+                n_estimators=n_estimators, max_depth=max_depth,
+                tree_method=method)
+            dt, _ = _timed(lambda: model.fit(X, y))
+            total += dt
+            # accuracy: paper-style half train / half held-out eval
+            idx = np.random.default_rng(1).permutation(len(y))
+            half = len(y) // 2
+            tr, ev = idx[:half], idx[half:]
+            m_half = BoostedTreesRegressor(
+                n_estimators=n_estimators, max_depth=max_depth,
+                tree_method=method).fit(X[tr], y[tr])
+            errs[name] = float(percent_error(y[ev],
+                                             m_half.predict(X[ev])).mean())
+        out[f"t_{method}_s"] = round(total, 4)
+        out["pct_err"][method] = errs
+    out["speedup"] = round(out["t_exact_s"] / out["t_hist_s"], 2)
+    out["pct_err_gap"] = round(max(
+        abs(out["pct_err"]["hist"][s] - out["pct_err"]["exact"][s])
+        for s in ("host", "device")), 4)
+    return out
+
+
+def bench_eml_sweep(space, surrogate, n_train) -> dict:
+    plat = EmilPlatformModel()
+    tuner = Autotuner(space, measure=lambda c: plat.energy(c, GB, None),
+                      surrogate=surrogate, n_training_experiments=n_train)
+    t_scalar, rep_s = _timed(lambda: tuner.tune_eml(engine="scalar"))
+    t_batched, rep_b = _timed(lambda: tuner.tune_eml(engine="batched"))
+    return {
+        "space_size": space.size(),
+        "t_scalar_s": round(t_scalar, 4),
+        "t_batched_s": round(t_batched, 4),
+        "speedup": round(t_scalar / t_batched, 1),
+        "same_best_config": rep_s.best_config == rep_b.best_config,
+        "best_energy_scalar": rep_s.best_energy_search,
+        "best_energy_batched": rep_b.best_energy_search,
+        "best_config": rep_b.best_config,
+    }
+
+
+def bench_saml(space, surrogate, n_train, iterations: int,
+               n_chains: int) -> dict:
+    """Equal-work comparison: ``n_chains`` seed-path scalar chains run one
+    after another (what the seed engine needs for the same search effort)
+    vs one vectorized launch advancing all chains in lockstep."""
+    plat = EmilPlatformModel()
+    tuner = Autotuner(space, measure=lambda c: plat.energy(c, GB, None),
+                      surrogate=surrogate, n_training_experiments=n_train)
+
+    def run_scalar_chains():
+        return [tuner.tune_saml(iterations=iterations, seed=1 + k)
+                for k in range(n_chains)]
+
+    t_scalar, reps_s = _timed(run_scalar_chains)
+    best_s = min(reps_s, key=lambda r: r.best_energy_search)
+    t_vec_total, rep_v = _timed(lambda: tuner.tune_saml(
+        engine="vectorized", iterations=iterations, seed=1,
+        n_chains=n_chains))
+    # second call reuses nothing across calls except warm jit caches —
+    # this is the steady-state per-search cost
+    t_vec_steady, rep_v2 = _timed(lambda: tuner.tune_saml(
+        engine="vectorized", iterations=iterations, seed=1,
+        n_chains=n_chains))
+    eml = tuner.tune_eml()
+    n_evals_scalar = sum(r.n_predictions for r in reps_s)
+    return {
+        "iterations": iterations,
+        "n_chains": n_chains,
+        "t_scalar_s": round(t_scalar, 4),
+        "t_scalar_one_chain_s": round(t_scalar / n_chains, 4),
+        "t_vectorized_total_s": round(t_vec_total, 4),
+        "t_vectorized_steady_s": round(t_vec_steady, 4),
+        "speedup_total": round(t_scalar / t_vec_total, 1),
+        "speedup_steady": round(t_scalar / t_vec_steady, 1),
+        "scalar_evals_per_s": round(n_evals_scalar / t_scalar, 1),
+        "vectorized_evals_per_s": round(
+            rep_v2.n_predictions / t_vec_steady, 1),
+        "best_energy_scalar": best_s.best_energy_search,
+        "best_energy_vectorized": rep_v.best_energy_search,
+        "best_energy_exhaustive": eml.best_energy_search,
+        "best_energy_rel_diff": round(
+            abs(rep_v.best_energy_search - best_s.best_energy_search)
+            / best_s.best_energy_search, 6),
+        "same_best_config": best_s.best_config == rep_v.best_config,
+        "vectorized_deterministic": rep_v.best_config == rep_v2.best_config,
+        "best_config_scalar": best_s.best_config,
+        "best_config_vectorized": rep_v.best_config,
+        "vectorized_within_pct_of_exhaustive": round(
+            100.0 * (rep_v.best_energy_search - eml.best_energy_search)
+            / eml.best_energy_search, 3),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small space / small models (CI smoke)")
+    ap.add_argument("--out", default=str(Path(__file__).resolve()
+                                        .parent.parent / "BENCH_search.json"))
+    ap.add_argument("--iterations", type=int, default=1000)
+    ap.add_argument("--n-chains", type=int, default=32)
+    args = ap.parse_args()
+    out_path = Path(args.out)
+    if not out_path.parent.is_dir():
+        ap.error(f"--out directory does not exist: {out_path.parent}")
+
+    # surrogate shared by the search benchmarks; modest ensemble so the
+    # *scalar* sweep finishes in minutes — both engines use the same model
+    n_est_search = 10 if args.quick else 40
+    space = paper_space(workload_step=10 if args.quick else 1)
+    plat = EmilPlatformModel()
+    t_fit, (surrogate, n_train) = _timed(lambda: fit_emil_surrogates(
+        plat, GB, datasets_gb=list(DATASETS_GB.values()),
+        n_estimators=n_est_search, seed=0))
+    print(f"[bench] surrogate fit ({n_est_search} estimators/side): "
+          f"{t_fit:.2f}s")
+
+    results = {
+        "quick": bool(args.quick),
+        "space_size": space.size(),
+        "bdtr_fit": bench_bdtr_fit(40 if args.quick else 150),
+    }
+    b = results["bdtr_fit"]
+    print(f"[bench] bdtr_fit: exact {b['t_exact_s']}s vs hist "
+          f"{b['t_hist_s']}s -> {b['speedup']}x "
+          f"(pct-err gap {b['pct_err_gap']})")
+
+    results["eml_sweep"] = bench_eml_sweep(space, surrogate, n_train)
+    e = results["eml_sweep"]
+    print(f"[bench] eml_sweep ({e['space_size']} configs): scalar "
+          f"{e['t_scalar_s']}s vs batched {e['t_batched_s']}s -> "
+          f"{e['speedup']}x (same best: {e['same_best_config']})")
+
+    iters = 200 if args.quick else args.iterations
+    results["saml"] = bench_saml(space, surrogate, n_train, iters,
+                                 args.n_chains)
+    s = results["saml"]
+    print(f"[bench] saml ({iters} iters x {s['n_chains']} chains): scalar "
+          f"{s['t_scalar_s']}s vs vectorized {s['t_vectorized_total_s']}s "
+          f"total / {s['t_vectorized_steady_s']}s steady -> "
+          f"{s['speedup_total']}x / {s['speedup_steady']}x "
+          f"({s['vectorized_evals_per_s']:.0f} evals/s)")
+
+    Path(args.out).write_text(json.dumps(results, indent=2) + "\n")
+    print(f"[bench] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

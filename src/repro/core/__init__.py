@@ -11,17 +11,22 @@ Public surface:
   fit_emil_surrogates    — the paper's 7200-experiment training pipeline
 """
 
-from .autotuner import Autotuner, TuneReport, fit_emil_surrogates
-from .bdtr import BoostedTreesRegressor, absolute_error, percent_error
-from .evaluators import LearnedEvaluator, MeasurementEvaluator, SurrogatePair
+from .autotuner import (Autotuner, TuneReport, emil_training_grids,
+                        fit_emil_surrogates)
+from .bdtr import (BoostedTreesRegressor, absolute_error, bin_features,
+                   fit_tree_hist, percent_error)
+from .evaluators import (BatchedLearnedEvaluator, LearnedEvaluator,
+                         MeasurementEvaluator, SurrogatePair)
 from .platform_model import DATASETS_GB, EmilPlatformModel
 from .sa import SAResult, SASchedule, simulated_annealing, vectorized_sa
 from .space import ConfigSpace, Param, paper_space
 
 __all__ = [
-    "Autotuner", "TuneReport", "fit_emil_surrogates",
+    "Autotuner", "TuneReport", "emil_training_grids", "fit_emil_surrogates",
     "BoostedTreesRegressor", "absolute_error", "percent_error",
-    "LearnedEvaluator", "MeasurementEvaluator", "SurrogatePair",
+    "bin_features", "fit_tree_hist",
+    "BatchedLearnedEvaluator", "LearnedEvaluator", "MeasurementEvaluator",
+    "SurrogatePair",
     "DATASETS_GB", "EmilPlatformModel",
     "SAResult", "SASchedule", "simulated_annealing", "vectorized_sa",
     "ConfigSpace", "Param", "paper_space",

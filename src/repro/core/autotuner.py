@@ -11,6 +11,28 @@ Sec. III-B of the paper) and exposes one ``tune`` call per strategy.
 All effort (experiments vs predictions) is accounted in the returned
 ``TuneReport`` so benchmarks can reproduce the paper's Result 3
 ("~5 % of the experiments of EM").
+
+Every strategy takes an ``engine=`` knob selecting the execution path.
+With deterministic oracles the enumeration engines (EM/EML) return
+identical seeded results and accounting; the vectorized SAML engine runs
+``n_chains`` chains at once (its prediction count covers every chain, and
+its PRNG stream differs from the scalar chain's):
+
+  * ``tune_em(engine=...)``    — ``"scalar"`` walks configs through the
+    measurement oracle one at a time; ``"batched"`` scores the whole
+    space with one ``measure_batch`` call (pass ``measure_batch=`` to
+    the constructor, e.g. ``lambda cols:
+    platform.energy_batch(cols, gb, rng)``).  ``"auto"`` picks batched
+    when available.  A noisy oracle draws noise in a different order per
+    engine, so seeded noisy results can differ.
+  * ``tune_eml(engine=...)``   — ``"scalar"`` is the seed per-config
+    loop; ``"batched"`` (default) materializes the space once
+    (``ConfigSpace.enumerate_columns``) and scores it with two ensemble
+    ``predict`` calls via ``BatchedLearnedEvaluator``.
+  * ``tune_saml(engine=...)``  — ``"scalar"`` (default) is the paper's
+    single chain; ``"vectorized"`` runs multi-chain jitted SA
+    (``sa.vectorized_sa``) over the packed BDTR pair with the
+    max(T_host, T_device) objective evaluated in JAX.
 """
 
 from __future__ import annotations
@@ -21,12 +43,14 @@ from typing import Any, Callable, Mapping, Sequence
 import numpy as np
 
 from .bdtr import BoostedTreesRegressor
-from .evaluators import LearnedEvaluator, MeasurementEvaluator, SurrogatePair
+from .evaluators import (BatchedLearnedEvaluator, LearnedEvaluator,
+                         MeasurementEvaluator, SurrogatePair)
 from .platform_model import EmilPlatformModel
-from .sa import SASchedule, simulated_annealing
+from .sa import SASchedule, simulated_annealing, vectorized_sa
 from .space import ConfigSpace
 
-__all__ = ["Autotuner", "TuneReport", "fit_emil_surrogates"]
+__all__ = ["Autotuner", "TuneReport", "emil_training_grids",
+           "fit_emil_surrogates"]
 
 
 @dataclass
@@ -59,18 +83,41 @@ class Autotuner:
         truth: Callable[[Mapping[str, Any]], float] | None = None,
         surrogate: SurrogatePair | None = None,
         n_training_experiments: int = 0,
+        measure_batch: Callable[[Mapping[str, np.ndarray]], np.ndarray] |
+        None = None,
     ):
         """``measure`` is the (possibly noisy) measurement oracle; ``truth``
         is the noise-free oracle used only for *reporting* (defaults to
-        ``measure``).  ``surrogate`` enables EML/SAML."""
+        ``measure``).  ``surrogate`` enables EML/SAML.  ``measure_batch``
+        (columns -> energies, e.g. ``lambda cols:
+        platform.energy_batch(cols, gb, rng)``) enables the batched EM
+        engine."""
         self.space = space
         self.measure = measure
         self.truth = truth or measure
         self.surrogate = surrogate
         self.n_training_experiments = n_training_experiments
+        self.measure_batch = measure_batch
 
     # -- strategies --------------------------------------------------------
-    def tune_em(self) -> TuneReport:
+    def tune_em(self, *, engine: str = "auto") -> TuneReport:
+        if engine == "auto":
+            engine = "batched" if self.measure_batch is not None else "scalar"
+        if engine == "batched":
+            if self.measure_batch is None:
+                raise ValueError("batched EM needs measure_batch= on the "
+                                 "Autotuner")
+            grid = self.space.index_grid()
+            energies = np.asarray(
+                self.measure_batch(self.space.enumerate_columns(grid)))
+            k = int(np.argmin(energies))      # first minimum, like the loop
+            best_cfg = self.space.from_indices(grid[k])
+            # enumeration visits each distinct config exactly once, so the
+            # deduplicated experiment count equals the space size
+            return self._report("EM", best_cfg, float(energies[k]),
+                                self.space.size(), 0)
+        if engine != "scalar":
+            raise ValueError(f"unknown EM engine {engine!r}")
         ev = MeasurementEvaluator(self.measure, self.space)
         best_cfg, best_e = None, float("inf")
         for cfg in self.space.enumerate():
@@ -79,8 +126,18 @@ class Autotuner:
                 best_cfg, best_e = cfg, e
         return self._report("EM", best_cfg, best_e, ev.n_experiments, 0)
 
-    def tune_eml(self) -> TuneReport:
+    def tune_eml(self, *, engine: str = "batched") -> TuneReport:
         surrogate = self._require_surrogate()
+        if engine == "batched":
+            ev = BatchedLearnedEvaluator(surrogate)
+            grid = self.space.index_grid()
+            energies = np.asarray(ev(self.space.enumerate_columns(grid)))
+            k = int(np.argmin(energies))      # first minimum, like the loop
+            best_cfg = self.space.from_indices(grid[k])
+            return self._report("EML", best_cfg, float(energies[k]),
+                                0, ev.n_predictions)
+        if engine != "scalar":
+            raise ValueError(f"unknown EML engine {engine!r}")
         ev = LearnedEvaluator(surrogate)
         best_cfg, best_e = None, float("inf")
         for cfg in self.space.enumerate():
@@ -101,8 +158,27 @@ class Autotuner:
                             ev.n_experiments, 0, res.checkpoints)
 
     def tune_saml(self, *, iterations: int = 1000, seed: int = 0,
-                  checkpoints: Sequence[int] = ()) -> TuneReport:
+                  checkpoints: Sequence[int] = (), engine: str = "scalar",
+                  n_chains: int = 32) -> TuneReport:
         surrogate = self._require_surrogate()
+        if engine == "vectorized":
+            if surrogate.energy_fn_jax_builder is None:
+                raise ValueError(
+                    "vectorized SAML needs a surrogate with an "
+                    "energy_fn_jax_builder (see fit_emil_surrogates)")
+            energy_fn = surrogate.energy_fn_jax_builder(self.space)
+            res = vectorized_sa(
+                self.space, energy_fn, n_chains=n_chains,
+                n_iterations=iterations,
+                schedule=SASchedule.for_iterations(iterations),
+                seed=seed, checkpoint_at=checkpoints,
+            )
+            # every chain step is one surrogate query — same accounting
+            # unit as the scalar engine (predictions, not experiments)
+            return self._report("SAML", res.best_config, res.best_energy,
+                                0, res.n_evaluations, res.checkpoints)
+        if engine != "scalar":
+            raise ValueError(f"unknown SAML engine {engine!r}")
         ev = LearnedEvaluator(surrogate)
         res = simulated_annealing(
             self.space, ev, seed=seed,
@@ -157,6 +233,55 @@ class Autotuner:
 # Surrogate training for the Emil platform (paper Sec. III-B / IV-B).
 # ---------------------------------------------------------------------------
 
+def _one_hot_cols(vals: np.ndarray, domain: Sequence[str]) -> np.ndarray:
+    return (np.asarray(vals)[:, None] ==
+            np.asarray(domain)[None, :]).astype(np.float64)
+
+
+def emil_training_grids(
+    platform: EmilPlatformModel,
+    *,
+    datasets_gb: Sequence[float],
+    host_threads: Sequence[int] = (2, 6, 12, 24, 36, 48),
+    device_threads: Sequence[int] = (2, 4, 8, 16, 30, 60, 120, 180, 240),
+    host_affinities: Sequence[str] = ("none", "scatter", "compact"),
+    device_affinities: Sequence[str] = ("balanced", "scatter", "compact"),
+    fractions: Sequence[float] | None = None,
+    rng: np.random.Generator | None = None,
+    seed: int = 0,
+):
+    """Vectorized generation of the paper's host/device training grids.
+
+    Returns ``((host_X, host_y), (device_X, device_y))`` with feature rows
+    [input_gb, threads, affinity one-hot..., fraction_pct] and noisy
+    execution times (lognormal, ``platform.noise_sigma``).  Row order
+    matches the paper's nested experiment loops (fraction fastest), and
+    the noise draws consume ``rng`` exactly like per-row scalar draws
+    would — so the grids are bit-reproducible for a given seed.
+    """
+    if rng is None:
+        rng = np.random.default_rng(seed)
+    if fractions is None:
+        fractions = [2.5 * i for i in range(1, 41)]  # 2.5 .. 100 step 2.5
+
+    def side(threads, affinities, time_batch):
+        gb, t, a, f = (g.ravel() for g in np.meshgrid(
+            np.asarray(datasets_gb, dtype=np.float64),
+            np.asarray(threads, dtype=np.float64),
+            np.arange(len(affinities)),
+            np.asarray(fractions, dtype=np.float64),
+            indexing="ij"))
+        aff = np.asarray(affinities)[a]
+        tt = time_batch(gb * f / 100.0, t, aff)
+        tt = tt * np.exp(rng.normal(0, platform.noise_sigma, tt.shape))
+        X = np.column_stack([gb, t, _one_hot_cols(aff, affinities), f])
+        return X, tt
+
+    return (side(host_threads, host_affinities, platform.host_time_batch),
+            side(device_threads, device_affinities,
+                 platform.device_time_batch))
+
+
 def fit_emil_surrogates(
     platform: EmilPlatformModel,
     dataset_gb: float,
@@ -170,6 +295,7 @@ def fit_emil_surrogates(
     seed: int = 0,
     n_estimators: int = 150,
     max_depth: int = 5,
+    tree_method: str = "hist",
     return_eval: bool = False,
 ):
     """Generate the paper's training grid and fit per-side BDTR models.
@@ -178,6 +304,18 @@ def fit_emil_surrogates(
     affinities x 40 fractions) and 4320 device experiments (9 thread
     counts), then trains on half and evaluates on the other half.  Feature
     vectors are [input_gb, threads, affinity one-hot..., fraction_pct].
+
+    The grid is generated vectorized (meshgrid + the platform's batch
+    evaluators) and the BDTR pair is histogram-fit by default; because the
+    grid features take few distinct values, the histogram splitter
+    partitions the training rows exactly like the exact one, though
+    off-grid queries can route differently where thresholds land inside
+    value gaps (``tree_method="exact"`` restores the reference splitter).
+
+    The returned ``SurrogatePair`` also carries the batched feature
+    builders (column batches -> model features) and a jit-compatible
+    energy-function builder, enabling ``Autotuner.tune_eml`` /
+    ``tune_saml(engine="vectorized")`` fast paths.
 
     Returns (surrogate, n_experiments[, eval_tables]).
     """
@@ -190,29 +328,10 @@ def fit_emil_surrogates(
     def one_hot(val: str, domain: Sequence[str]) -> list[float]:
         return [1.0 if val == d else 0.0 for d in domain]
 
-    host_rows, host_y = [], []
-    for gb in datasets_gb:
-        for t in host_threads:
-            for aff in host_affinities:
-                for f in fractions:
-                    tt = platform.host_time(gb * f / 100.0, t, aff)
-                    tt *= float(np.exp(rng.normal(0, platform.noise_sigma)))
-                    host_rows.append([gb, t, *one_hot(aff, host_affinities), f])
-                    host_y.append(tt)
-    dev_rows, dev_y = [], []
-    for gb in datasets_gb:
-        for t in device_threads:
-            for aff in device_affinities:
-                for f in fractions:
-                    tt = platform.device_time(gb * f / 100.0, t, aff)
-                    tt *= float(np.exp(rng.normal(0, platform.noise_sigma)))
-                    dev_rows.append([gb, t, *one_hot(aff, device_affinities), f])
-                    dev_y.append(tt)
-
-    host_X = np.asarray(host_rows)
-    host_y = np.asarray(host_y)
-    dev_X = np.asarray(dev_rows)
-    dev_y = np.asarray(dev_y)
+    (host_X, host_y), (dev_X, dev_y) = emil_training_grids(
+        platform, datasets_gb=datasets_gb, host_threads=host_threads,
+        device_threads=device_threads, host_affinities=host_affinities,
+        device_affinities=device_affinities, fractions=fractions, rng=rng)
     n_experiments = len(host_y) + len(dev_y)
 
     # half train / half eval (paper's "standard validation methodology")
@@ -225,9 +344,11 @@ def fit_emil_surrogates(
     (dXtr, dytr), (dXev, dyev) = split(dev_X, dev_y)
 
     host_model = BoostedTreesRegressor(
-        n_estimators=n_estimators, max_depth=max_depth, seed=seed).fit(hXtr, hytr)
+        n_estimators=n_estimators, max_depth=max_depth, seed=seed,
+        tree_method=tree_method).fit(hXtr, hytr)
     dev_model = BoostedTreesRegressor(
-        n_estimators=n_estimators, max_depth=max_depth, seed=seed + 1).fit(dXtr, dytr)
+        n_estimators=n_estimators, max_depth=max_depth, seed=seed + 1,
+        tree_method=tree_method).fit(dXtr, dytr)
 
     def host_features(cfg: Mapping[str, Any]) -> np.ndarray:
         return np.asarray([
@@ -243,9 +364,57 @@ def fit_emil_surrogates(
             100.0 - float(cfg["host_fraction"]),
         ])
 
+    def host_features_cols(cols: Mapping[str, np.ndarray]) -> np.ndarray:
+        t = np.asarray(cols["host_threads"], dtype=np.float64)
+        return np.column_stack([
+            np.full(t.shape, dataset_gb), t,
+            _one_hot_cols(cols["host_affinity"], host_affinities),
+            np.asarray(cols["host_fraction"], dtype=np.float64),
+        ])
+
+    def device_features_cols(cols: Mapping[str, np.ndarray]) -> np.ndarray:
+        t = np.asarray(cols["device_threads"], dtype=np.float64)
+        return np.column_stack([
+            np.full(t.shape, dataset_gb), t,
+            _one_hot_cols(cols["device_affinity"], device_affinities),
+            100.0 - np.asarray(cols["host_fraction"], dtype=np.float64),
+        ])
+
+    def energy_fn_jax_builder(space: ConfigSpace):
+        """Jitted E(cfg) = max(T_h_hat, T_d_hat) over a space's encoded
+        features.  The space must use the paper's parameter names."""
+        import jax.numpy as jnp
+
+        names = space.feature_names
+        i_ht = names.index("host_threads")
+        i_dt = names.index("device_threads")
+        i_f = names.index("host_fraction")
+        h_idx = [names.index(f"host_affinity={a}") for a in host_affinities]
+        d_idx = [names.index(f"device_affinity={a}") for a in
+                 device_affinities]
+        fn_h = host_model.predict_fn_jax()
+        fn_d = dev_model.predict_fn_jax()
+
+        def energy(X):
+            X = jnp.asarray(X)
+            f = X[:, i_f]
+            gb = jnp.full_like(f, dataset_gb)
+            Xh = jnp.stack([gb, X[:, i_ht], *(X[:, j] for j in h_idx), f],
+                           axis=1)
+            Xd = jnp.stack([gb, X[:, i_dt], *(X[:, j] for j in d_idx),
+                            100.0 - f], axis=1)
+            th = jnp.where(f > 0, fn_h(Xh), 0.0)
+            td = jnp.where(f < 100, fn_d(Xd), 0.0)
+            return jnp.maximum(th, td)
+
+        return energy
+
     surrogate = SurrogatePair(host=host_model, device=dev_model,
                               host_features=host_features,
-                              device_features=device_features)
+                              device_features=device_features,
+                              host_features_cols=host_features_cols,
+                              device_features_cols=device_features_cols,
+                              energy_fn_jax_builder=energy_fn_jax_builder)
     if return_eval:
         eval_tables = {
             "host": (hXev, hyev, host_model.predict(hXev)),

@@ -16,6 +16,21 @@ quantile-binned) thresholds.  Fitting runs in numpy on the host; prediction
 is available both in numpy and as a jit-compatible JAX function over packed
 node arrays, so the vectorized SA chains can query the surrogate thousands
 of times per second.
+
+Two tree-growing engines share the same tree semantics:
+
+  * ``tree_method="exact"`` — per-node argsort over every feature
+    (the original reference splitter),
+  * ``tree_method="hist"``  — LightGBM-style histogram fitting: features
+    are quantile-binned ONCE per ``fit``, per-node split search is two
+    ``bincount`` calls + prefix sums, and each child inherits its
+    histogram from the parent by sibling subtraction.  On data whose
+    features have at most ``max_bins`` distinct values (e.g. the paper's
+    measurement grids) the candidate splits partition the training rows
+    exactly like the exact splitter's, so predictions agree at every
+    trained value; threshold *placement* uses global bin edges, so the
+    two engines may route queries differently inside value gaps the
+    node's rows do not straddle (off-grid inputs).
 """
 
 from __future__ import annotations
@@ -28,7 +43,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-__all__ = ["BoostedTreesRegressor", "fit_tree", "Tree"]
+__all__ = ["BoostedTreesRegressor", "fit_tree", "fit_tree_hist",
+           "BinnedFeatures", "bin_features", "Tree"]
 
 
 @dataclass
@@ -143,6 +159,186 @@ def fit_tree(X: np.ndarray, y: np.ndarray, *, max_depth: int = 4,
     )
 
 
+# ---------------------------------------------------------------------------
+# Histogram-based fitting (LightGBM-style).
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BinnedFeatures:
+    """Per-fit binning of a feature matrix (computed once, reused by every
+    boosting iteration — the bins depend on X only, not on the residuals).
+
+    ``codes[i, f]`` is the bin index of sample ``i`` on feature ``f``;
+    ``split_value[f][b]`` is the real-valued threshold realising the split
+    "bin <= b goes left" (midpoint between bin b's upper edge and the
+    smallest data value above it, so ``x <= thr`` partitions exactly like
+    the bin codes on training data).
+    """
+
+    codes: np.ndarray            # (n, d) int32
+    n_bins: np.ndarray           # (d,) int64
+    split_value: tuple           # d arrays of shape (n_bins[f] - 1,)
+
+
+def bin_features(X: np.ndarray, max_bins: int) -> BinnedFeatures:
+    """Quantile-bin every feature into at most ``max_bins`` bins.
+
+    Features with <= ``max_bins`` distinct values get one bin per value
+    (the histogram splitter is then exact).
+    """
+    X = np.asarray(X, dtype=np.float64)
+    n, d = X.shape
+    codes = np.empty((n, d), dtype=np.int32)
+    n_bins = np.empty(d, dtype=np.int64)
+    split_value = []
+    for f in range(d):
+        x = X[:, f]
+        u = np.unique(x)
+        if len(u) > max_bins:
+            qs = np.quantile(x, np.linspace(0.0, 1.0, max_bins + 1)[1:])
+            uppers = np.unique(qs)
+            uppers[-1] = u[-1]          # quantile interpolation can undershoot
+        else:
+            uppers = u
+        c = np.searchsorted(uppers, x, side="left")
+        codes[:, f] = np.minimum(c, len(uppers) - 1)
+        n_bins[f] = len(uppers)
+        # smallest data value strictly above each interior bin boundary
+        nxt_i = np.minimum(np.searchsorted(u, uppers[:-1], side="right"),
+                           len(u) - 1)
+        split_value.append(0.5 * (uppers[:-1] + u[nxt_i]))
+    return BinnedFeatures(codes=codes, n_bins=n_bins,
+                          split_value=tuple(split_value))
+
+
+def fit_tree_hist(binned: BinnedFeatures, y: np.ndarray, *,
+                  row_idx: np.ndarray | None = None, max_depth: int = 4,
+                  min_samples_leaf: int = 4, min_gain: float = 1e-12,
+                  return_pred: bool = False):
+    """Greedy SSE-minimising regression tree over pre-binned features.
+
+    Split search per node is O(n_node * d) via ``bincount`` + prefix sums
+    (vs. the exact splitter's per-node, per-feature argsort); one child's
+    histogram is derived from the parent's by sibling subtraction.
+
+    With ``return_pred=True`` returns ``(tree, pred)`` where ``pred`` holds
+    the tree's prediction for every training row covered by ``row_idx``
+    (leaf assignments fall out of the partition built while growing, so
+    the boosting loop can skip a full ``Tree.predict`` pass).
+    """
+    codes, n_bins, split_value = binned.codes, binned.n_bins, binned.split_value
+    n_all, d = codes.shape
+    B = int(n_bins.max())
+    y = np.asarray(y, dtype=np.float64)
+    if row_idx is None:
+        row_idx = np.arange(n_all)
+    offsets = np.arange(d, dtype=np.int64) * B
+    # interior split positions exist only below each feature's bin count
+    _cols = np.arange(max(B - 1, 1))[None, :]
+    interior = _cols < (n_bins[:, None] - 1)       # (d, B-1) static mask
+
+    feature: list[int] = []
+    threshold: list[float] = []
+    left: list[int] = []
+    right: list[int] = []
+    value: list[float] = []
+
+    def new_node() -> int:
+        feature.append(-1)
+        threshold.append(0.0)
+        left.append(0)
+        right.append(0)
+        value.append(0.0)
+        return len(feature) - 1
+
+    def hist_of(idx: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        flat = (codes[idx].astype(np.int64) + offsets).ravel()
+        cnt = np.bincount(flat, minlength=d * B).reshape(d, B)
+        sm = np.bincount(flat, weights=np.repeat(y[idx], d),
+                         minlength=d * B).reshape(d, B)
+        return cnt, sm
+
+    def best_split(cnt, sm, m):
+        """-> (gain, f, b, left_count, left_sum) or None."""
+        if B < 2:
+            return None
+        # the last column is never a split point — drop it before cumsum
+        nl = np.cumsum(cnt[:, :-1], axis=1)
+        sl = np.cumsum(sm[:, :-1], axis=1)
+        total = float(sm[0].sum())    # every feature's bins sum to sum(y)
+        nr = m - nl
+        sr = total - sl
+        # SSE reduction, same formula as the exact splitter (0-count bins
+        # divide to inf/nan; masked out just below — errstate is hoisted
+        # to the caller).  The constant -total^2/m term does not affect
+        # the argmax; it is applied to the winner only.
+        gain = sl * sl / nl + sr * sr / nr
+        # children must be non-empty even when min_samples_leaf == 0, or
+        # an empty bin's NaN/inf gain would win the argmax
+        min_child = max(min_samples_leaf, 1)
+        ok = interior & (nl >= min_child) & (nr >= min_child)
+        gain = np.where(ok, gain, -np.inf)
+        k = int(np.argmax(gain))
+        f, b = divmod(k, B - 1)
+        g = float(gain[f, b]) - total * total / m
+        if not np.isfinite(g) or g <= min_gain:
+            return None
+        return g, f, b, int(nl[f, b]), float(sl[f, b])
+
+    pred = np.empty(n_all) if return_pred else None
+
+    def grow(idx: np.ndarray, depth: int, mean: float, hist=None) -> int:
+        node = new_node()
+        value[node] = mean
+        if depth >= max_depth or len(idx) < 2 * min_samples_leaf:
+            if pred is not None:
+                pred[idx] = mean
+            return node
+        cnt, sm = hist if hist is not None else hist_of(idx)
+        res = best_split(cnt, sm, len(idx))
+        if res is None:
+            if pred is not None:
+                pred[idx] = mean
+            return node
+        _, f, b, nl, sl = res
+        mask = codes[idx, f] <= b
+        li, ri = idx[mask], idx[~mask]
+        feature[node] = f
+        threshold[node] = float(split_value[f][b])
+        # Child means fall out of the split sums — no per-node y gather.
+        l_mean = sl / nl
+        r_mean = (mean * len(idx) - sl) / (len(idx) - nl)
+        # Build child histograms only for children that can still split;
+        # when both need one, build the smaller child's and derive the
+        # other by sibling subtraction.
+        def splittable(child):
+            return depth + 1 < max_depth and len(child) >= 2 * min_samples_leaf
+        lh = rh = None
+        if splittable(li) and splittable(ri):
+            if len(li) <= len(ri):
+                lh = hist_of(li)
+                rh = (cnt - lh[0], sm - lh[1])
+            else:
+                rh = hist_of(ri)
+                lh = (cnt - rh[0], sm - rh[1])
+        left[node] = grow(li, depth + 1, l_mean, lh)
+        right[node] = grow(ri, depth + 1, r_mean, rh)
+        return node
+
+    row_idx = np.asarray(row_idx)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        grow(row_idx, 0, float(y[row_idx].mean()))
+    tree = Tree(
+        feature=np.asarray(feature, dtype=np.int32),
+        threshold=np.asarray(threshold, dtype=np.float64),
+        left=np.asarray(left, dtype=np.int32),
+        right=np.asarray(right, dtype=np.int32),
+        value=np.asarray(value, dtype=np.float64),
+        depth=max_depth,
+    )
+    return (tree, pred) if return_pred else tree
+
+
 @dataclass
 class BoostedTreesRegressor:
     """LSBoost ensemble with packed-array JAX prediction."""
@@ -154,6 +350,7 @@ class BoostedTreesRegressor:
     max_bins: int = 64
     subsample: float = 1.0
     seed: int = 0
+    tree_method: str = "exact"       # "exact" | "hist"
     # fitted state
     base_: float = 0.0
     trees_: list = field(default_factory=list)
@@ -164,11 +361,16 @@ class BoostedTreesRegressor:
         y = np.asarray(y, dtype=np.float64)
         if X.ndim != 2 or len(X) != len(y):
             raise ValueError("X must be (n, d) and aligned with y")
+        if self.tree_method not in ("exact", "hist"):
+            raise ValueError(f"unknown tree_method {self.tree_method!r}")
         rng = np.random.default_rng(self.seed)
         self.base_ = float(y.mean())
         pred = np.full_like(y, self.base_)
         self.trees_ = []
         n = len(y)
+        # bins depend on X only: compute once, reuse across all estimators
+        binned = (bin_features(X, self.max_bins)
+                  if self.tree_method == "hist" else None)
         for _ in range(self.n_estimators):
             resid = y - pred
             if self.subsample < 1.0:
@@ -177,11 +379,25 @@ class BoostedTreesRegressor:
                                  replace=False)
             else:
                 idx = np.arange(n)
-            tree = fit_tree(X[idx], resid[idx], max_depth=self.max_depth,
-                            min_samples_leaf=self.min_samples_leaf,
-                            max_bins=self.max_bins)
+            if binned is not None and self.subsample >= 1.0:
+                # full-data fit: the grower hands back every row's leaf
+                # value, so no predict pass is needed
+                tree, tpred = fit_tree_hist(
+                    binned, resid, row_idx=idx, max_depth=self.max_depth,
+                    min_samples_leaf=self.min_samples_leaf, return_pred=True)
+            elif binned is not None:
+                tree = fit_tree_hist(binned, resid, row_idx=idx,
+                                     max_depth=self.max_depth,
+                                     min_samples_leaf=self.min_samples_leaf)
+                tpred = None
+            else:
+                tree = fit_tree(X[idx], resid[idx], max_depth=self.max_depth,
+                                min_samples_leaf=self.min_samples_leaf,
+                                max_bins=self.max_bins)
+                tpred = None
             self.trees_.append(tree)
-            pred = pred + self.learning_rate * tree.predict(X)
+            pred = pred + self.learning_rate * (
+                tpred if tpred is not None else tree.predict(X))
         self._packed = None
         return self
 

@@ -145,6 +145,7 @@ def vectorized_sa(
     n_iterations: int = 2000,
     schedule: SASchedule = SASchedule(),
     seed: int = 0,
+    checkpoint_at: Sequence[int] = (),
 ) -> SAResult:
     """Run ``n_chains`` independent SA chains in lockstep under jit/vmap.
 
@@ -152,6 +153,11 @@ def vectorized_sa(
     by ``space.encode``) to energies ``(n,)`` and must be jit-compatible —
     e.g. ``bdtr.predict_jax``.  Configurations are carried as per-parameter
     value-index vectors; features are built by table lookup.
+
+    ``checkpoint_at`` records, for each given (1-based) iteration number,
+    the best-so-far (energy, config) across ALL chains at that iteration
+    — the multi-chain analogue of the scalar engine's best-so-far
+    checkpoints (``history``, by contrast, follows the winning chain).
     """
     card = jnp.asarray(space.cardinalities)
     n_params = len(space.params)
@@ -178,7 +184,11 @@ def vectorized_sa(
 
         def step(state, t):
             idx, e, best_idx, best_e, key = state
-            key, kp, ks, kd, ka = jax.random.split(key, 5)
+            # one key per decision: param choice, step size, step direction,
+            # categorical resample, acceptance (kd must NOT be reused for
+            # the categorical draw, or resampled values correlate with the
+            # step direction)
+            key, kp, ks, kd, kc, ka = jax.random.split(key, 6)
             which = jax.random.randint(kp, (), 0, n_params)
             # ordinal: +-1/2 step clipped; categorical: resample
             step_sz = jax.random.randint(ks, (), 1, 3) * jnp.where(
@@ -189,7 +199,7 @@ def vectorized_sa(
             ord_val = jnp.clip(cur_val + step_sz, 0, c - 1)
             ord_val = jnp.where(ord_val == cur_val,
                                 jnp.clip(cur_val - step_sz, 0, c - 1), ord_val)
-            cat_val = jax.random.randint(kd, (), 0, c)
+            cat_val = jax.random.randint(kc, (), 0, c)
             new_val = jnp.where(ordinal[which], ord_val, cat_val).astype(jnp.int32)
             cand = idx.at[which].set(new_val)
             ce = energy_of(cand)
@@ -202,7 +212,7 @@ def vectorized_sa(
             better = e < best_e
             best_idx = jnp.where(better, idx, best_idx)
             best_e = jnp.where(better, e, best_e)
-            return (idx, e, best_idx, best_e, key), best_e
+            return (idx, e, best_idx, best_e, key), (best_e, best_idx)
 
         (idx, e, best_idx, best_e, _), trace = jax.lax.scan(
             step, (idx0, e0, idx0, e0, key), temps
@@ -210,14 +220,29 @@ def vectorized_sa(
         return best_idx, best_e, trace
 
     keys = jax.random.split(jax.random.PRNGKey(seed), n_chains)
-    best_idx, best_e, traces = jax.jit(jax.vmap(chain))(keys)
+    best_idx, best_e, (trace_e, trace_idx) = jax.jit(jax.vmap(chain))(keys)
     winner = int(jnp.argmin(best_e))
     cfg = space.from_indices(np.asarray(best_idx[winner]))
+    trace_e = np.asarray(trace_e)        # (n_chains, n_iterations)
+    trace_idx = np.asarray(trace_idx)    # (n_chains, n_iterations, n_params)
+    win_e = trace_e[winner]
+    # a checkpoint is the best-so-far across ALL chains at that iteration
+    # (every chain has spent its budget by then), not the eventual
+    # winner's state — the winner may lag at intermediate iterations
+    checkpoints = {}
+    for it in checkpoint_at:
+        it = int(it)
+        if not 1 <= it <= n_iterations:
+            continue
+        c = int(np.argmin(trace_e[:, it - 1]))
+        checkpoints[it] = (float(trace_e[c, it - 1]),
+                           space.from_indices(trace_idx[c, it - 1]))
     return SAResult(
         best_config=cfg,
         best_energy=float(best_e[winner]),
         n_iterations=n_iterations,
         n_evaluations=n_chains * (n_iterations + 1),
-        history=[(i + 1, float(traces[winner][i]), float(traces[winner][i]), 0.0)
+        history=[(i + 1, float(win_e[i]), float(win_e[i]), 0.0)
                  for i in range(0, n_iterations, max(1, n_iterations // 64))],
+        checkpoints=checkpoints,
     )

@@ -119,6 +119,53 @@ class ConfigSpace:
         for combo in itertools.product(*(p.values for p in self.params)):
             yield dict(zip(self.names, combo))
 
+    # -- batched enumeration (vectorized search engine) ----------------------
+    def index_grid(self) -> np.ndarray:
+        """All configurations as value-index rows, shape (size, n_params).
+
+        Row order matches ``enumerate()`` (last parameter varies fastest),
+        so ``from_indices(index_grid()[k])`` is the k-th enumerated config.
+        """
+        cards = self.cardinalities
+        return np.indices(cards).reshape(len(cards), -1).T.astype(np.int32)
+
+    def enumerate_columns(self, grid: np.ndarray | None = None
+                          ) -> dict[str, np.ndarray]:
+        """All configurations as per-parameter value columns (size,) each.
+
+        The column-oriented view is what batched oracles consume: no
+        per-config dicts are materialized anywhere on the batched path.
+        Pass a precomputed ``index_grid()`` to avoid rebuilding it.
+        """
+        if grid is None:
+            grid = self.index_grid()
+        return {
+            p.name: np.asarray(p.values)[grid[:, i]]
+            for i, p in enumerate(self.params)
+        }
+
+    def encode_all(self) -> np.ndarray:
+        """Feature matrix for the whole space, shape (size, feature_dim).
+
+        Vectorized equivalent of stacking ``encode`` over ``enumerate()``
+        (same row order), built by gathering ``index_feature_table`` rows.
+        """
+        return self.encode_indices(self.index_grid())
+
+    def encode_indices(self, grid: np.ndarray) -> np.ndarray:
+        """Encode index rows (n, n_params) into features (n, feature_dim)."""
+        grid = np.asarray(grid, dtype=np.int64)
+        table, _ = self.index_feature_table()
+        out = np.zeros((grid.shape[0], self.feature_dim))
+        for i in range(len(self.params)):
+            out += table[i, grid[:, i], :]
+        return out
+
+    def enumerate_encoded(self) -> tuple[np.ndarray, np.ndarray]:
+        """(index_grid, feature_matrix) for the whole space, enumerate order."""
+        grid = self.index_grid()
+        return grid, self.encode_indices(grid)
+
     # -- index-vector codec (for vectorized SA) ------------------------------
     def to_indices(self, cfg: Mapping[str, Any]) -> np.ndarray:
         return np.array(

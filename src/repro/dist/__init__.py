@@ -1,0 +1,22 @@
+"""Distribution subsystem — STUB package.
+
+Model and launch code import sharding/compression primitives from here;
+the real implementations (mesh rules, gradient compression, fault
+tolerance, sequence-sharded decode) are a future PR.  This package exists
+so that the single-host paths (models, core autotuner, kernels) import and
+run today:
+
+  * ``api.constrain`` is a no-op passthrough (single-host: nothing to
+    constrain) and ``api.current_rules`` returns ``None`` (no mesh rules
+    active), which the model code already treats as "run unsharded".
+  * Everything else raises ``NotImplementedError`` with a pointer here.
+
+``IS_STUB`` lets tests (see ``tests/conftest.py``) skip the suites that
+exercise the real distributed behaviour.
+"""
+
+IS_STUB = True
+
+from . import api  # noqa: E402,F401
+
+__all__ = ["api", "IS_STUB"]

@@ -1,0 +1,28 @@
+"""Sharding-rules API — stub implementation (see package docstring).
+
+``constrain``/``current_rules`` have working single-host semantics (no-op /
+no rules) because every model forward pass calls them; ``use_rules`` raises
+until the real mesh-rules subsystem lands.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+__all__ = ["constrain", "current_rules", "use_rules"]
+
+
+def constrain(x: Any, *_names: Any, **_kw: Any) -> Any:
+    """Sharding-constraint annotation. Single-host stub: identity."""
+    return x
+
+
+def current_rules() -> None:
+    """Active mesh sharding rules. Stub: none are ever active."""
+    return None
+
+
+def use_rules(*_a: Any, **_kw: Any):
+    raise NotImplementedError(
+        "repro.dist.api.use_rules: the mesh-rules subsystem is a stub "
+        "(see src/repro/dist/__init__.py); full dist support is a future PR")

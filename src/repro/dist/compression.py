@@ -1,0 +1,37 @@
+"""Gradient compression — stub (see ``repro.dist`` package docstring)."""
+
+from __future__ import annotations
+
+__all__ = [
+    "CompressionConfig", "compress_with_feedback", "init_error_state",
+    "quantize_int8", "dequantize_int8", "topk_compress", "topk_decompress",
+    "compressed_allreduce_mean", "wire_bytes",
+]
+
+_MSG = ("repro.dist.compression is a stub (see src/repro/dist/__init__.py); "
+        "gradient compression is a future PR")
+
+
+class CompressionConfig:
+    def __init__(self, *_a, **_kw):
+        raise NotImplementedError(_MSG)
+
+
+def _stub(*_a, **_kw):
+    raise NotImplementedError(_MSG)
+
+
+compress_with_feedback = _stub
+init_error_state = _stub
+quantize_int8 = _stub
+dequantize_int8 = _stub
+topk_compress = _stub
+topk_decompress = _stub
+compressed_allreduce_mean = _stub
+wire_bytes = _stub
+
+
+def __getattr__(name: str):
+    if name.startswith("__"):  # import machinery probes __path__ etc.
+        raise AttributeError(name)
+    raise NotImplementedError(f"{_MSG} (accessed {name!r})")

@@ -1,0 +1,18 @@
+"""Fault tolerance — stub (see ``repro.dist`` package docstring)."""
+
+from __future__ import annotations
+
+__all__ = ["run_with_restarts"]
+
+_MSG = ("repro.dist.fault is a stub (see src/repro/dist/__init__.py); "
+        "fault tolerance is a future PR")
+
+
+def run_with_restarts(*_a, **_kw):
+    raise NotImplementedError(_MSG)
+
+
+def __getattr__(name: str):
+    if name.startswith("__"):  # import machinery probes __path__ etc.
+        raise AttributeError(name)
+    raise NotImplementedError(f"{_MSG} (accessed {name!r})")

@@ -1,0 +1,18 @@
+"""Sequence-sharded decode attention — stub (see ``repro.dist``)."""
+
+from __future__ import annotations
+
+__all__ = ["seq_decode_attention"]
+
+_MSG = ("repro.dist.seq_decode is a stub (see src/repro/dist/__init__.py); "
+        "sequence-sharded decode is a future PR")
+
+
+def seq_decode_attention(*_a, **_kw):
+    raise NotImplementedError(_MSG)
+
+
+def __getattr__(name: str):
+    if name.startswith("__"):  # import machinery probes __path__ etc.
+        raise AttributeError(name)
+    raise NotImplementedError(f"{_MSG} (accessed {name!r})")

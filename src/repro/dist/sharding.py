@@ -1,0 +1,22 @@
+"""Sharding configuration — stub (see ``repro.dist`` package docstring)."""
+
+from __future__ import annotations
+
+__all__ = ["ShardingConfig"]
+
+_MSG = ("repro.dist.sharding is a stub (see src/repro/dist/__init__.py); "
+        "the full sharding subsystem is a future PR")
+
+
+class ShardingConfig:
+    """Placeholder so imports and annotations resolve; unusable until the
+    real subsystem lands."""
+
+    def __init__(self, *_a, **_kw):
+        raise NotImplementedError(_MSG)
+
+
+def __getattr__(name: str):
+    if name.startswith("__"):  # import machinery probes __path__ etc.
+        raise AttributeError(name)
+    raise NotImplementedError(f"{_MSG} (accessed {name!r})")
