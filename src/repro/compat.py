@@ -1,0 +1,68 @@
+"""JAX version compatibility shims for the SPMD surface.
+
+The distribution subsystem targets the modern JAX mesh API
+(``jax.make_mesh(..., axis_types=...)``, ``jax.set_mesh``,
+``jax.shard_map``) but must also run on older releases (this container
+ships 0.4.x) where those spell ``jax.make_mesh(shape, names)``,
+``with mesh:`` and ``jax.experimental.shard_map.shard_map``.  Everything
+that touches meshes or shard_map goes through the three helpers below so
+the rest of the codebase is version-agnostic:
+
+  * ``make_mesh(shape, axes)``   — mesh with Auto axis types when supported
+  * ``set_mesh(mesh)``           — context manager installing ``mesh`` as
+                                   the ambient mesh
+  * ``shard_map(f, mesh, in_specs=..., out_specs=...)`` — per-shard SPMD
+                                   mapping (replication checking disabled:
+                                   the dist collectives combine with psum,
+                                   which older checkers reject)
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Sequence
+
+import jax
+
+try:  # modern API (jax >= 0.6)
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # pragma: no cover - depends on container jax
+    _AxisType = None
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if _AxisType is not None:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(_AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Install ``mesh`` as the ambient mesh (``jax.set_mesh`` fallback)."""
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+    else:  # legacy global mesh context manager
+        with mesh:
+            yield mesh
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict (older JAX wraps the
+    per-program properties in a one-element list)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
+def shard_map(f, mesh, *, in_specs: Any, out_specs: Any):
+    """Version-agnostic ``shard_map`` (replication checking off)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)

@@ -78,14 +78,23 @@ class HeterogeneousRunner:
         b = jax.tree.map(lambda x: x[n_a:], batch)
         return a, b
 
+    @staticmethod
+    def _block(result) -> None:
+        # duck-typed so step functions may return anything with jax.Array
+        # block semantics (e.g. a simulated-device result in tests)
+        for leaf in jax.tree.leaves(result):
+            blocker = getattr(leaf, "block_until_ready", None)
+            if blocker is not None:
+                blocker()
+
     def step(self, batch: dict, rebalance: bool = True) -> dict:
         a, b = self._split(batch)
         t0 = time.perf_counter()
         ra = self._fn_a(a)                      # async dispatch
         rb = self._fn_b(b)                      # overlaps with group A
-        jax.block_until_ready(ra)
+        self._block(ra)
         t_a = time.perf_counter() - t0
-        jax.block_until_ready(rb)
+        self._block(rb)
         t_b = time.perf_counter() - t0
         rec = {
             "fraction": self.fraction,

@@ -1,28 +1,83 @@
-"""Sharding-rules API — stub implementation (see package docstring).
+"""Mesh-rules API: install rules, query them, constrain intermediates.
 
-``constrain``/``current_rules`` have working single-host semantics (no-op /
-no rules) because every model forward pass calls them; ``use_rules`` raises
-until the real mesh-rules subsystem lands.
+Model code annotates intermediates with *logical* axis names::
+
+    x = constrain(x, "batch", "seq", None)
+
+and the launch layer installs a :class:`~repro.dist.sharding.MeshRules`
+table around tracing::
+
+    with use_rules(scfg.rules(mesh)):
+        step = jax.jit(fn, ...)
+        step.lower(...)
+
+``constrain`` resolves each logical name through the active table into a
+``with_sharding_constraint`` on the bound mesh.  With no rules installed
+(single host, plain tests) every call is the identity, so unsharded
+paths never pay for the subsystem.  Dimensions whose extent the mapped
+mesh axes do not divide are left unsharded rather than erroring — the
+rules are hints to GSPMD, not hard partitioning.
 """
 
 from __future__ import annotations
 
+import contextlib
+import threading
 from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .sharding import MeshRules
 
 __all__ = ["constrain", "current_rules", "use_rules"]
 
-
-def constrain(x: Any, *_names: Any, **_kw: Any) -> Any:
-    """Sharding-constraint annotation. Single-host stub: identity."""
-    return x
+_STATE = threading.local()
 
 
-def current_rules() -> None:
-    """Active mesh sharding rules. Stub: none are ever active."""
-    return None
+def _stack() -> list:
+    if not hasattr(_STATE, "stack"):
+        _STATE.stack = []
+    return _STATE.stack
 
 
-def use_rules(*_a: Any, **_kw: Any):
-    raise NotImplementedError(
-        "repro.dist.api.use_rules: the mesh-rules subsystem is a stub "
-        "(see src/repro/dist/__init__.py); full dist support is a future PR")
+def current_rules() -> MeshRules | None:
+    """The innermost installed rules table, or None when unsharded."""
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use_rules(rules: MeshRules | None):
+    """Install ``rules`` for the dynamic extent of the block.
+
+    ``None`` is accepted and pushes an explicit "no rules" scope — useful
+    to locally disable sharding inside a ruled region.
+    """
+    stack = _stack()
+    stack.append(rules)
+    try:
+        yield rules
+    finally:
+        stack.pop()
+
+
+def constrain(x: Any, *names: str | None) -> Any:
+    """Annotate ``x`` with the sharding the active rules give ``names``.
+
+    One logical name (or None) per array dimension.  No-op when no rules
+    are installed; per-dimension fallback to replication when the mapped
+    axes do not divide that dimension.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    shape = getattr(x, "shape", None)
+    if shape is None or len(shape) != len(names):
+        return x
+    dims = [rules.spec_dim(name, extent)
+            for extent, name in zip(shape, names)]
+    if all(d is None for d in dims):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*dims)))

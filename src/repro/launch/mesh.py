@@ -4,27 +4,33 @@
 this module never touches jax device state.  Single-pod: 256 chips as
 (data=16, model=16).  Multi-pod: 2 pods x 256 chips as
 (pod=2, data=16, model=16) — the pod axis is the DCN-connected dimension.
+
+Mesh creation and the ambient-mesh context go through ``repro.compat`` so
+the same code runs on old and new JAX mesh APIs; ``set_mesh`` is
+re-exported here for the drivers.
 """
 
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+
+from ..compat import make_mesh, set_mesh  # noqa: F401 — re-exported
+
+__all__ = ["make_production_mesh", "make_host_mesh", "set_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False,
                          shape: tuple[int, ...] | None = None,
-                         axes: tuple[str, ...] | None = None) -> Mesh:
+                         axes: tuple[str, ...] | None = None):
     if shape is None:
         shape = (2, 16, 16) if multi_pod else (16, 16)
     if axes is None:
         axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(n_devices: int | None = None,
-                   axes: tuple[str, ...] = ("data",)) -> Mesh:
+                   axes: tuple[str, ...] = ("data",)):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = n_devices or len(jax.devices())
-    return jax.make_mesh((n,), axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh((n,), axes)

@@ -17,7 +17,7 @@ from .. import configs
 from ..dist.api import use_rules
 from ..dist.sharding import ShardingConfig
 from ..models import build_model
-from .mesh import make_host_mesh
+from .mesh import make_host_mesh, set_mesh
 from . import steps
 
 
@@ -33,7 +33,7 @@ def serve_session(cfg, *, batch: int, prompt_len: int, gen: int,
     max_len = prompt_len + gen
     rng = np.random.default_rng(seed)
 
-    with jax.set_mesh(mesh), use_rules(scfg.rules(mesh)):
+    with set_mesh(mesh), use_rules(scfg.rules(mesh)):
         params = jax.jit(model.init)(jax.random.PRNGKey(seed))
         tokens = jnp.asarray(rng.integers(
             0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)

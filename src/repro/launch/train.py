@@ -29,7 +29,7 @@ from ..models import build_model
 from ..optim.adamw import AdamWConfig, init_opt_state
 from ..optim.schedule import warmup_cosine
 from . import shapes, steps
-from .mesh import make_host_mesh
+from .mesh import make_host_mesh, set_mesh
 
 
 def make_data_cfg(cfg, batch: int, seq_len: int, seed: int = 0) -> DataConfig:
@@ -58,7 +58,7 @@ def train_loop(cfg, *, steps_total: int, batch: int, seq_len: int,
     batch_shapes = jax.tree.map(
         lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), data.batch_at(0))
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         bundle = steps.make_train_step(cfg, scfg, mesh, opt_cfg, batch_shapes)
         step_fn = bundle.jit()
 
@@ -98,25 +98,34 @@ def train_loop(cfg, *, steps_total: int, batch: int, seq_len: int,
 
         losses: list[float] = []
         t0 = time.time()
-        with use_rules(bundle.rules):
-            for step, host_batch in data.iterate(start_step):
-                if step >= steps_total:
-                    break
-                if fail_at_step is not None and step == fail_at_step:
-                    raise RuntimeError(f"injected failure at step {step}")
-                dev_batch = jax.tree.map(
-                    lambda a, s: jax.device_put(a, s), host_batch,
-                    bundle.in_shardings[1])
-                state, metrics = step_fn(state, dev_batch)
-                loss = float(metrics["loss"])
-                losses.append(loss)
-                if log_every and step % log_every == 0:
-                    dt = time.time() - t0
-                    print(f"step {step:5d}  loss {loss:7.4f}  "
-                          f"gnorm {float(metrics['gnorm']):7.3f}  "
-                          f"{dt:6.1f}s", flush=True)
-                if mgr and ckpt_every and (step + 1) % ckpt_every == 0:
-                    mgr.save(step + 1, state, extra={"loss": loss})
+        try:
+            with use_rules(bundle.rules):
+                for step, host_batch in data.iterate(start_step):
+                    if step >= steps_total:
+                        break
+                    if fail_at_step is not None and step == fail_at_step:
+                        raise RuntimeError(
+                            f"injected failure at step {step}")
+                    dev_batch = jax.tree.map(
+                        lambda a, s: jax.device_put(a, s), host_batch,
+                        bundle.in_shardings[1])
+                    state, metrics = step_fn(state, dev_batch)
+                    loss = float(metrics["loss"])
+                    losses.append(loss)
+                    if log_every and step % log_every == 0:
+                        dt = time.time() - t0
+                        print(f"step {step:5d}  loss {loss:7.4f}  "
+                              f"gnorm {float(metrics['gnorm']):7.3f}  "
+                              f"{dt:6.1f}s", flush=True)
+                    if mgr and ckpt_every and (step + 1) % ckpt_every == 0:
+                        mgr.save(step + 1, state, extra={"loss": loss})
+        except BaseException:
+            # flush in-flight async saves so a supervised restart
+            # (dist.fault.run_with_restarts) sees every completed
+            # checkpoint — otherwise resume races the writer thread
+            if mgr:
+                mgr.wait()
+            raise
         if mgr:
             mgr.save(steps_total, state, extra={"final": True})
             mgr.wait()

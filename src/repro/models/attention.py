@@ -203,6 +203,13 @@ def decode_attention(p: Params, x: jax.Array, cache: Params,
     q = _project_q(p, x, cfg, None if cross else jnp.full((b, 1), pos))
     rules = current_rules()
     kvseq_axes = tuple(rules.rules.get("kv_seq", ())) if rules else ()
+    batch_axes = tuple(rules.rules.get("batch", ())) if rules else ()
+    if kvseq_axes:
+        # the sharded path needs shard_map-divisible extents; fall back to
+        # the dense path otherwise (rules are hints, not hard partitioning)
+        if cache["k"].shape[1] % rules.axes_size(kvseq_axes) \
+                or (batch_axes and b % rules.axes_size(batch_axes)):
+            kvseq_axes = ()
     if not cross and kvseq_axes:
         # sequence-sharded cache: shard_map'd local update + flash-decode
         # with cross-shard logsumexp combine (see dist.seq_decode).
@@ -210,8 +217,7 @@ def decode_attention(p: Params, x: jax.Array, cache: Params,
         k_new, v_new = _project_kv(p, x, cfg, jnp.full((b, 1), pos))
         out32, ck, cv = seq_decode_attention(
             q[:, 0], k_new[:, 0], v_new[:, 0], cache["k"], cache["v"], pos,
-            mesh=rules.mesh, seq_axes=kvseq_axes,
-            batch_axes=tuple(rules.rules.get("batch", ())))
+            mesh=rules.mesh, seq_axes=kvseq_axes, batch_axes=batch_axes)
         cache = {"k": ck, "v": cv}
         dt = jnp.dtype(cfg.compute_dtype)
         out = out32.astype(dt)[:, None]                       # (B,1,H,hd)

@@ -1,18 +1,16 @@
 """Shared test configuration.
 
-Two concerns:
+One concern: **hypothesis fallback** — the property tests use
+``hypothesis`` when it is installed (``pip install -e .[dev]``), but the
+bare container only ships pytest.  When ``hypothesis`` is absent we
+install a tiny shim into ``sys.modules`` whose ``@given`` marks the test
+as skipped, so the rest of each module still collects and runs.
 
-1. **hypothesis fallback** — the property tests use ``hypothesis`` when it
-   is installed (``pip install -e .[dev]``), but the bare container only
-   ships pytest.  When ``hypothesis`` is absent we install a tiny shim into
-   ``sys.modules`` whose ``@given`` marks the test as skipped, so the rest
-   of each module still collects and runs.
-
-2. **dist-stub skips** — ``repro.dist`` is currently a stub package
-   (``repro.dist.IS_STUB``): the API surface exists so model/launch modules
-   import, but sharding/compression/fault/seq_decode raise
-   ``NotImplementedError`` when exercised.  Tests that exercise the real
-   distributed subsystem are skipped until it lands.
+The distributed suites (``test_distributed.py``, ``test_roofline.py``,
+``test_fault_tolerance.py``, ``test_dryrun_integration.py``, the
+compression tests in ``test_substrates.py``) run unconditionally against
+the real ``repro.dist`` subsystem; multi-device cases isolate themselves
+in subprocesses via ``helpers.run_subprocess``.
 """
 
 from __future__ import annotations
@@ -52,43 +50,3 @@ except ImportError:
     _hyp.HealthCheck = types.SimpleNamespace(all=lambda: [])
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st
-
-# -- 2. dist-stub skips -------------------------------------------------------
-try:
-    from repro import dist as _dist
-    _DIST_IS_STUB = bool(getattr(_dist, "IS_STUB", False))
-except ImportError:
-    _DIST_IS_STUB = True
-
-# Whole modules that drive the distributed subsystem end-to-end — not even
-# imported while dist is a stub (some also need launch/mesh features beyond
-# the container's JAX version).
-collect_ignore = [
-    "test_distributed.py",
-    "test_roofline.py",
-    "test_fault_tolerance.py",
-    "test_dryrun_integration.py",
-] if _DIST_IS_STUB else []
-
-# Individual tests inside otherwise-runnable modules.
-_DIST_TESTS = {
-    ("test_substrates.py", "test_int8_roundtrip_bound"),
-    ("test_substrates.py", "test_topk_keeps_largest"),
-    ("test_substrates.py", "test_error_feedback_preserves_convergence"),
-    ("test_substrates.py", "test_wire_bytes_accounting"),
-}
-
-
-def pytest_collection_modifyitems(config, items):
-    if not _DIST_IS_STUB:
-        return
-    marker = pytest.mark.skip(
-        reason="repro.dist is a stub package; distributed subsystem is a "
-               "future PR")
-    for item in items:
-        fname = item.path.name if hasattr(item, "path") else \
-            item.fspath.basename
-        base = item.originalname if getattr(item, "originalname", None) \
-            else item.name
-        if (fname, base.split("[")[0]) in _DIST_TESTS:
-            item.add_marker(marker)

@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import os
+import re
 import subprocess
 import sys
 from pathlib import Path
@@ -10,17 +11,37 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parents[1]
 SRC = REPO / "src"
 
+# Prepended to subprocess snippets that emulate an asynchronous device:
+# dispatch returns at once, the result becomes ready `cost` seconds later
+# (forced host devices share one CPU thread pool, so real concurrent
+# compute can't produce reliable per-group wall times).
+SIM_DEVICE_SNIPPET = """
+import time
+
+class SimReady:
+    # jax.Array-style blocking for an emulated device
+    def __init__(self, value, cost):
+        self.value = value
+        self._done_at = time.perf_counter() + cost
+    def block_until_ready(self):
+        time.sleep(max(0.0, self._done_at - time.perf_counter()))
+        return self
+"""
+
 
 def run_subprocess(code: str, devices: int = 8, timeout: int = 600) -> str:
     """Run python ``code`` in a fresh process with N host platform devices.
 
     Multi-device tests must not pollute the main pytest process (jax locks
-    device count at first init), so they run isolated.
+    device count at first init), so they run isolated.  Any inherited
+    device-count flag (e.g. the one CI sets for the main process) is
+    stripped so ``devices`` always wins.
     """
     env = dict(os.environ)
+    inherited = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                       env.get("XLA_FLAGS", ""))
     env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
-                        + env.get("XLA_FLAGS", "").replace(
-                            "--xla_force_host_platform_device_count=512", ""))
+                        + inherited)
     env["PYTHONPATH"] = f"{SRC}:{env.get('PYTHONPATH', '')}"
     env["JAX_PLATFORMS"] = "cpu"
     proc = subprocess.run([sys.executable, "-c", code], env=env,

@@ -2,18 +2,18 @@
 
 import pytest
 
-from helpers import run_subprocess
+from helpers import SIM_DEVICE_SNIPPET, run_subprocess
 
 
 def test_seq_sharded_decode_matches_ref():
     out = run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh, set_mesh
 from repro.dist.seq_decode import seq_decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 rng = np.random.default_rng(0)
 b, s, kv, rep, hd = 4, 64, 2, 3, 16
 h = kv * rep
@@ -23,7 +23,7 @@ vn = jnp.asarray(rng.standard_normal((b, kv, hd)), jnp.float32)
 ck = jnp.asarray(rng.standard_normal((b, s, kv, hd)), jnp.float32)
 cv = jnp.asarray(rng.standard_normal((b, s, kv, hd)), jnp.float32)
 pos = jnp.int32(37)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     ck_d = jax.device_put(ck, NamedSharding(mesh, P("data", "model", None, None)))
     cv_d = jax.device_put(cv, NamedSharding(mesh, P("data", "model", None, None)))
     out, ck2, cv2 = jax.jit(lambda *a: seq_decode_attention(
@@ -69,12 +69,12 @@ def test_tensor_parallel_train_step():
     out = run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np
 from repro import configs
+from repro.compat import make_mesh
 from repro.launch.train import train_loop
 from repro.dist.sharding import ShardingConfig
 
 cfg = configs.get("phi3.5-moe-42b-a6.6b").smoke()
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 out = train_loop(cfg, steps_total=4, batch=4, seq_len=32, mesh=mesh,
                  log_every=0,
                  scfg=ShardingConfig(data_axes=("data",),
@@ -122,7 +122,12 @@ print("ELASTIC_OK")
 
 
 def test_hetero_runner_rebalances_straggler():
-    out = run_subprocess("""
+    # Forced host devices share one CPU thread pool, so a compute-based
+    # straggler would contend its way back to equal wall times; the slow
+    # group is instead an emulated async device (dispatch returns at once,
+    # the result becomes ready after a per-row latency), which exercises
+    # the split / overlap / E = max(T_a, T_b) / rebalance path for real.
+    out = run_subprocess(SIM_DEVICE_SNIPPET + """
 import jax, jax.numpy as jnp, numpy as np
 from repro.core.hetero import DeviceGroup, HeterogeneousRunner
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -134,15 +139,12 @@ gb = DeviceGroup("slow", devs[4:], work_multiplier=4)
 def builder(group):
     mesh = group.mesh()
     mult = group.work_multiplier
+    per_row_s = 0.004 * mult / len(group.devices)
     def fn(batch):
         x = batch["x"]
-        def body(x):
-            w = jnp.ones((x.shape[-1], x.shape[-1]), x.dtype)
-            for _ in range(mult * 8):
-                x = jnp.tanh(x @ w * 0.01)
-            return x.sum()
         sh = NamedSharding(mesh, P("data"))
-        return jax.jit(body, in_shardings=sh)(jax.device_put(x, sh))
+        y = jax.jit(lambda v: v.sum(), in_shardings=sh)(jax.device_put(x, sh))
+        return SimReady(y, per_row_s * x.shape[0])
     return fn
 
 runner = HeterogeneousRunner(builder, ga, gb, fraction=0.5)
@@ -154,20 +156,42 @@ for _ in range(12):
 # group B is ~4x slower per row: the tuned fraction should give A much more
 assert runner.fraction > 0.6, runner.fraction
 first, last = runner.history[2], runner.history[-1]
+assert last["t_step"] < first["t_step"], (first, last)
 print("HETERO_OK", runner.fraction, first["t_step"], last["t_step"])
 """)
     assert "HETERO_OK" in out
 
 
+def test_param_specs_tolerate_overlapping_axis_roles():
+    # fsdp over the same mesh axis as TP: the axis may shard only one dim
+    # of a leaf, never appear twice in its PartitionSpec
+    out = run_subprocess("""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding
+from repro.compat import make_mesh
+from repro.dist.sharding import ShardingConfig, param_specs
+mesh = make_mesh((2, 4), ("data", "model"))
+scfg = ShardingConfig(data_axes=("data",), model_axes=("model",),
+                      fsdp_axes=("model",))
+shapes = {"w": jax.ShapeDtypeStruct((8, 16), jnp.float32),
+          "b": jax.ShapeDtypeStruct((3,), jnp.float32)}
+specs = param_specs(shapes, mesh, scfg)
+w = jax.device_put(jnp.zeros((8, 16)), NamedSharding(mesh, specs["w"]))
+b = jax.device_put(jnp.zeros((3,)), NamedSharding(mesh, specs["b"]))
+print("OVERLAP_OK", specs)
+""")
+    assert "OVERLAP_OK" in out
+
+
 def test_compressed_allreduce_matches_mean():
     out = run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np
-from repro.dist.compression import compressed_allreduce_mean
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
-x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 64)), jnp.float32)
 from jax.sharding import NamedSharding, PartitionSpec as P
-with jax.set_mesh(mesh):
+from repro.compat import make_mesh, set_mesh
+from repro.dist.compression import compressed_allreduce_mean
+mesh = make_mesh((8,), ("data",))
+x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 64)), jnp.float32)
+with set_mesh(mesh):
     xs = jax.device_put(x, NamedSharding(mesh, P("data", None)))
     # each shard holds one row; all-reduce-mean over rows
     got = jax.jit(lambda x: compressed_allreduce_mean(

@@ -1,0 +1,105 @@
+"""Heterogeneous work distribution: the rebalance controller and the
+two-group runner (multi-device CPU via subprocess, per CI's
+``XLA_FLAGS=--xla_force_host_platform_device_count``)."""
+
+import pytest
+
+from helpers import SIM_DEVICE_SNIPPET, run_subprocess
+
+from repro.core.hetero import proportional_rebalance
+
+
+# -- proportional_rebalance (pure controller math) ------------------------------
+
+def test_rebalance_fixed_point_when_rates_equal():
+    # both groups finish together -> the split is already optimal
+    assert proportional_rebalance(0.5, 1.0, 1.0) == pytest.approx(0.5)
+    assert proportional_rebalance(0.8, 1.0, 1.0) == pytest.approx(0.8)
+
+
+def test_rebalance_moves_toward_faster_group():
+    # A finished first -> A's rate is higher -> A gets more work
+    f1 = proportional_rebalance(0.5, 1.0, 2.0)
+    assert f1 > 0.5
+    # and the move is damped, not a jump to the instantaneous target
+    target = (0.5 / 1.0) / (0.5 / 1.0 + 0.5 / 2.0)
+    assert f1 == pytest.approx(0.5 + 0.5 * (target - 0.5))
+    assert proportional_rebalance(0.5, 2.0, 1.0) < 0.5
+
+
+def test_rebalance_converges_to_rate_ratio():
+    # group B is 4x slower per row: equal finish time at fraction 0.8
+    f = 0.5
+    for _ in range(30):
+        f = proportional_rebalance(f, f / 1.0, (1 - f) / 0.25)
+    assert f == pytest.approx(0.8, abs=1e-3)
+
+
+def test_rebalance_no_damping_jumps_to_target():
+    assert proportional_rebalance(0.5, 1.0, 3.0, damping=1.0) \
+        == pytest.approx(0.75)
+
+
+def test_rebalance_survives_degenerate_inputs():
+    # zero times / extreme fractions must not divide by zero or leave (0, 1)
+    for f in (0.0, 1.0, 0.5):
+        for ta, tb in ((0.0, 1.0), (1.0, 0.0), (0.0, 0.0)):
+            out = proportional_rebalance(f, ta, tb)
+            assert 0.0 < out < 1.0
+
+
+# -- HeterogeneousRunner (multi-device) -----------------------------------------
+
+def test_runner_split_and_tune_fraction_sa():
+    out = run_subprocess(SIM_DEVICE_SNIPPET + """
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.hetero import DeviceGroup, HeterogeneousRunner
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+devs = jax.devices()
+ga = DeviceGroup("fast", devs[:4])
+gb = DeviceGroup("slow", devs[4:], work_multiplier=3)
+
+def jit_builder(group):
+    mesh = group.mesh()
+    per_row_s = 0.002 * group.work_multiplier / len(group.devices)
+    def fn(batch):
+        x = batch["x"]
+        sh = NamedSharding(mesh, P("data"))
+        y = jax.jit(lambda v: v.sum(), in_shardings=sh)(jax.device_put(x, sh))
+        return SimReady(y, per_row_s * x.shape[0])
+    return fn
+
+batch = {"x": np.random.default_rng(0).standard_normal((64, 128)).astype(np.float32)}
+runner = HeterogeneousRunner(jit_builder, ga, gb, fraction=0.5)
+
+# split invariants: group shares are device-aligned and cover the batch
+a, b = runner._split(batch)
+assert a["x"].shape[0] % len(ga.devices) == 0
+assert a["x"].shape[0] + b["x"].shape[0] == 64
+np.testing.assert_array_equal(
+    np.concatenate([a["x"], b["x"]]), batch["x"])
+runner.step(batch)   # real sharded dispatch through both groups
+rec = runner.step(batch)
+assert rec["rows_a"] + rec["rows_b"] == 64
+
+# the paper's offline loop: SAM over the fraction space with measured
+# step times as the energy -> near the 3:1 optimum (0.75).  The energies
+# come from a pure simulated device pair (sleep-dominated, >=0.05 s per
+# step) so scheduler noise cannot reorder candidate fractions.
+def sim_builder(group):
+    per_row_s = 0.01 * group.work_multiplier / len(group.devices)
+    def fn(batch):
+        return SimReady(None, per_row_s * batch["x"].shape[0])
+    return fn
+
+sim = HeterogeneousRunner(sim_builder, ga, gb, fraction=0.5)
+e_half = sim.step(batch, rebalance=False)["t_step"]
+best = sim.tune_fraction_sa(batch, iterations=40, seed=0)
+assert 0.6 <= best <= 0.9, best
+e_best = sim.step(batch, rebalance=False)["t_step"]
+# optimum halves the 50/50 step time; allow generous scheduling slack
+assert e_best < 0.8 * e_half + 0.02, (e_best, e_half, best)
+print("HETERO_TUNE_OK", best, e_half, e_best)
+""")
+    assert "HETERO_TUNE_OK" in out
