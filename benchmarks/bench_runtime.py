@@ -1,0 +1,180 @@
+"""Benchmark: static split vs the online chunked scheduler.
+
+Two sections, written to BENCH_runtime.json:
+
+  1. ``sim_convergence`` — a simulated 2-group setup with a 3:1 per-row
+     speed skew (serial device queues, the timing model the rebalancer
+     sees on real hardware).  Measures the oracle static split (0.75),
+     the naive static 50/50 split, and the online scheduler starting
+     blind at 50/50 — recording the step it converges (first step whose
+     time is within 10% of oracle and stays there) and the steady-state
+     ratio.  Asserts convergence within 20 steps and a steady state
+     within 10% of the oracle (the repo's acceptance bar).
+  2. ``real_dispatch`` — 8 forced host devices split into two groups of
+     4 running a real jitted reduction: one-shot static dispatch
+     (``HeterogeneousRunner``) vs the chunked double-buffered scheduler
+     (``ChunkedScheduler``), so the chunking overhead on equal-speed
+     groups is visible in the trajectory.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_runtime.py [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+# 8 forced host devices for the real-dispatch section; must be set before
+# jax (imported transitively by repro) initializes
+_FLAG = "--xla_force_host_platform_device_count=8"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = f"{_FLAG} " + os.environ.get("XLA_FLAGS", "")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.hetero import DeviceGroup, HeterogeneousRunner  # noqa: E402
+from repro.runtime import ChunkedScheduler, EwmaController  # noqa: E402
+from repro.runtime.simulate import (make_serial_sim_builder,  # noqa: E402
+                                    sim_skew_groups)
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+# -- section 1: simulated convergence -------------------------------------------
+
+def bench_sim_convergence(*, skew: int = 3, steps: int = 20,
+                          per_row_s: float = 0.0004,
+                          batch_rows: int = 128) -> dict:
+    batch = {"x": np.zeros((batch_rows, 4), np.float32)}
+
+    def run(shares, n, rebalance):
+        sched = ChunkedScheduler(
+            make_serial_sim_builder(per_row_s), sim_skew_groups(skew),
+            controller=EwmaController(2, shares=np.asarray(shares),
+                                      min_share=0.02))
+        return sched, [sched.step(batch, rebalance=rebalance)
+                       for _ in range(n)]
+
+    oracle_share = skew / (skew + 1.0)
+    _, oracle = run([oracle_share, 1 - oracle_share], 6, rebalance=False)
+    t_oracle = float(np.median([r["t_step"] for r in oracle]))
+    _, naive = run([0.5, 0.5], 6, rebalance=False)
+    t_naive = float(np.median([r["t_step"] for r in naive]))
+
+    sched, online = run([0.5, 0.5], steps, rebalance=True)
+    t_steps = [r["t_step"] for r in online]
+    t_steady = float(np.median(t_steps[-5:]))
+
+    converged_at = None
+    for i, t in enumerate(t_steps):
+        if t <= 1.10 * t_oracle and all(u <= 1.10 * t_oracle
+                                        for u in t_steps[i:]):
+            converged_at = i + 1
+            break
+
+    out = {
+        "skew": skew,
+        "steps": steps,
+        "batch_rows": batch_rows,
+        "t_oracle_static_s": round(t_oracle, 6),
+        "t_naive_static_s": round(t_naive, 6),
+        "t_online_steady_s": round(t_steady, 6),
+        "online_vs_oracle": round(t_steady / t_oracle, 4),
+        "online_vs_naive_speedup": round(t_naive / t_steady, 3),
+        "converged_at_step": converged_at,
+        "shares_final": [round(float(s), 4) for s in sched.shares],
+        "t_step_trajectory_s": [round(t, 6) for t in t_steps],
+    }
+    # the repo's acceptance bar — fail loudly (CI smoke runs this)
+    assert converged_at is not None and converged_at <= 20, out
+    assert t_steady <= 1.10 * t_oracle, out
+    return out
+
+
+# -- section 2: real dispatch on 8 forced host devices --------------------------
+
+def bench_real_dispatch(*, steps: int = 10, rows: int = 256,
+                        cols: int = 4096) -> dict:
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    devs = jax.devices()
+    groups = [DeviceGroup("a", devs[:4]), DeviceGroup("b", devs[4:])]
+
+    def builder(group):
+        mesh = group.mesh()
+        sh = NamedSharding(mesh, P("data"))
+        f = jax.jit(lambda v: jnp_work(v), in_shardings=sh)
+
+        def fn(chunk):
+            return f(jax.device_put(chunk["x"], sh))
+        return fn
+
+    import jax.numpy as jnp
+
+    def jnp_work(v):
+        # a few flops per row so the dispatch overhead does not dominate
+        return jnp.tanh(v @ v.T).sum(axis=1)
+
+    rng = np.random.default_rng(0)
+    batch = {"x": rng.standard_normal((rows, cols)).astype(np.float32)}
+
+    static = HeterogeneousRunner(builder, *groups, fraction=0.5)
+    sched = ChunkedScheduler(builder, groups)
+    for _ in range(2):                                   # warm both paths
+        static.step(batch, rebalance=False)
+        sched.step(batch, rebalance=False)
+    t_static = [static.step(batch, rebalance=False)["t_step"]
+                for _ in range(steps)]
+    t_online = [sched.step(batch)["t_step"] for _ in range(steps)]
+
+    return {
+        "devices": len(devs),
+        "rows": rows,
+        "cols": cols,
+        "steps": steps,
+        "t_static_split_s": round(float(np.median(t_static)), 6),
+        "t_online_sched_s": round(float(np.median(t_online)), 6),
+        "shares_final": [round(float(s), 4) for s in sched.shares],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer steps, smaller arrays)")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_runtime.json"))
+    args = ap.parse_args()
+
+    t0 = time.perf_counter()
+    results = {"sim_convergence": bench_sim_convergence()}
+    if args.smoke:
+        results["real_dispatch"] = bench_real_dispatch(steps=3, rows=64,
+                                                       cols=512)
+    else:
+        results["real_dispatch"] = bench_real_dispatch()
+    results["smoke"] = bool(args.smoke)
+    results["wall_s"] = round(time.perf_counter() - t0, 3)
+
+    out = Path(args.out)
+    out.write_text(json.dumps(results, indent=1) + "\n")
+    sim = results["sim_convergence"]
+    print(f"sim: online/oracle {sim['online_vs_oracle']}x, converged at "
+          f"step {sim['converged_at_step']}, "
+          f"{sim['online_vs_naive_speedup']}x over naive 50/50")
+    rd = results["real_dispatch"]
+    print(f"real: static {rd['t_static_split_s']}s vs online "
+          f"{rd['t_online_sched_s']}s on {rd['devices']} devices")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,14 +2,20 @@
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call = wall time of the
 whole benchmark function) and writes full tables to results/bench/.
+``--json`` additionally writes one ``BENCH_<name>.json`` per benchmark
+at the repo root (wall time, derived metric, full rows) — the perf
+trajectory the stand-alone benches (``bench_search.py``,
+``bench_runtime.py``) already follow.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig2_motivation,...]
+                                            [--json]
 """
 
 from __future__ import annotations
 
 import argparse
 import csv
+import json
 import sys
 import time
 from pathlib import Path
@@ -20,7 +26,8 @@ from repro.core import EmilPlatformModel  # noqa: E402
 
 from . import beyond_paper, paper_tables  # noqa: E402
 
-RESULTS = Path(__file__).resolve().parents[1] / "results" / "bench"
+ROOT = Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "results" / "bench"
 
 
 def benches():
@@ -44,6 +51,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_<name>.json at the repo root")
     args = ap.parse_args()
     selected = set(args.only.split(",")) if args.only else None
     RESULTS.mkdir(parents=True, exist_ok=True)
@@ -61,6 +70,13 @@ def main() -> None:
                 w = csv.DictWriter(f, fieldnames=list(rows[0]))
                 w.writeheader()
                 w.writerows(rows)
+        if args.json:
+            (ROOT / f"BENCH_{name}.json").write_text(json.dumps({
+                "name": name,
+                "wall_s": round(us / 1e6, 6),
+                "derived": derived,
+                "rows": rows,
+            }, indent=1, default=str) + "\n")
 
 
 if __name__ == "__main__":

@@ -65,6 +65,10 @@ class TuneReport:
     space_size: int
     # {iteration: (measured energy of best-so-far config, config)}
     checkpoints: dict[int, tuple[float, dict]] = field(default_factory=dict)
+    # True when the report was served from a persistent tuning cache
+    # (repro.runtime.store) — the counters above then describe the effort
+    # of the *original* recorded search, and this tune ran 0 experiments.
+    from_cache: bool = False
 
     @property
     def experiments_fraction(self) -> float:
@@ -85,19 +89,44 @@ class Autotuner:
         n_training_experiments: int = 0,
         measure_batch: Callable[[Mapping[str, np.ndarray]], np.ndarray] |
         None = None,
+        warm_start=None,
+        record_to=None,
+        workload: Mapping[str, Any] | None = None,
     ):
         """``measure`` is the (possibly noisy) measurement oracle; ``truth``
         is the noise-free oracle used only for *reporting* (defaults to
         ``measure``).  ``surrogate`` enables EML/SAML.  ``measure_batch``
         (columns -> energies, e.g. ``lambda cols:
         platform.energy_batch(cols, gb, rng)``) enables the batched EM
-        engine."""
+        engine.
+
+        ``warm_start`` / ``record_to`` attach a persistent tuning cache
+        (``repro.runtime.store.TuningStore``, or a path to one; pass the
+        same store to both for read-write caching).  ``workload``
+        describes the tuned workload beyond the space itself — shapes,
+        device topology, anything that changes measured times — and is
+        folded into the cache key.  ``tune()`` consults ``warm_start``
+        before searching (a hit performs zero new measurements) and
+        records fresh results to ``record_to``; the per-strategy
+        ``tune_*`` methods always search.
+        """
         self.space = space
         self.measure = measure
         self.truth = truth or measure
         self.surrogate = surrogate
         self.n_training_experiments = n_training_experiments
         self.measure_batch = measure_batch
+        self.warm_start = self._as_store(warm_start)
+        self.record_to = self._as_store(record_to)
+        self.workload = workload
+
+    @staticmethod
+    def _as_store(store):
+        if store is None or hasattr(store, "lookup"):
+            return store
+        # deferred import: core must stay importable without runtime
+        from ..runtime.store import TuningStore
+        return TuningStore(store)
 
     # -- strategies --------------------------------------------------------
     def tune_em(self, *, engine: str = "auto") -> TuneReport:
@@ -196,7 +225,14 @@ class Autotuner:
         }.get(strategy)
         if fn is None:
             raise ValueError(f"unknown strategy {strategy!r}")
-        return fn(**kw)
+        if self.warm_start is not None:
+            hit = self.warm_start.lookup(self.space, self.workload, strategy)
+            if hit is not None:
+                return hit
+        report = fn(**kw)
+        if self.record_to is not None:
+            self.record_to.record(self.space, self.workload, strategy, report)
+        return report
 
     # -- helpers -----------------------------------------------------------
     def _require_surrogate(self) -> SurrogatePair:

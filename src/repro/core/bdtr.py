@@ -44,7 +44,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["BoostedTreesRegressor", "fit_tree", "fit_tree_hist",
-           "BinnedFeatures", "bin_features", "Tree"]
+           "BinnedFeatures", "bin_features", "bin_rows", "append_rows",
+           "Tree"]
 
 
 @dataclass
@@ -178,6 +179,7 @@ class BinnedFeatures:
     codes: np.ndarray            # (n, d) int32
     n_bins: np.ndarray           # (d,) int64
     split_value: tuple           # d arrays of shape (n_bins[f] - 1,)
+    uppers: tuple                # d arrays of per-bin upper edges (n_bins[f],)
 
 
 def bin_features(X: np.ndarray, max_bins: int) -> BinnedFeatures:
@@ -191,6 +193,7 @@ def bin_features(X: np.ndarray, max_bins: int) -> BinnedFeatures:
     codes = np.empty((n, d), dtype=np.int32)
     n_bins = np.empty(d, dtype=np.int64)
     split_value = []
+    all_uppers = []
     for f in range(d):
         x = X[:, f]
         u = np.unique(x)
@@ -203,12 +206,41 @@ def bin_features(X: np.ndarray, max_bins: int) -> BinnedFeatures:
         c = np.searchsorted(uppers, x, side="left")
         codes[:, f] = np.minimum(c, len(uppers) - 1)
         n_bins[f] = len(uppers)
+        all_uppers.append(uppers)
         # smallest data value strictly above each interior bin boundary
         nxt_i = np.minimum(np.searchsorted(u, uppers[:-1], side="right"),
                            len(u) - 1)
         split_value.append(0.5 * (uppers[:-1] + u[nxt_i]))
     return BinnedFeatures(codes=codes, n_bins=n_bins,
-                          split_value=tuple(split_value))
+                          split_value=tuple(split_value),
+                          uppers=tuple(all_uppers))
+
+
+def bin_rows(binned: BinnedFeatures, X_new: np.ndarray) -> np.ndarray:
+    """Code new rows with an existing binning's edges (no re-binning).
+
+    Values above the top edge clamp into the last bin (tree ensembles
+    cannot extrapolate anyway); values below the bottom edge land in bin
+    0.  This is what keeps incremental refits cheap: the per-fit
+    quantile pass runs once, and every later batch of observations is a
+    ``searchsorted`` against the frozen edges.
+    """
+    X_new = np.asarray(X_new, dtype=np.float64)
+    if X_new.ndim != 2 or X_new.shape[1] != binned.codes.shape[1]:
+        raise ValueError("X_new must be (n, d) with d matching the binning")
+    codes = np.empty(X_new.shape, dtype=np.int32)
+    for f in range(X_new.shape[1]):
+        c = np.searchsorted(binned.uppers[f], X_new[:, f], side="left")
+        codes[:, f] = np.minimum(c, binned.n_bins[f] - 1)
+    return codes
+
+
+def append_rows(binned: BinnedFeatures, X_new: np.ndarray) -> BinnedFeatures:
+    """Extend a binning with new rows, reusing the existing bin edges."""
+    return BinnedFeatures(
+        codes=np.concatenate([binned.codes, bin_rows(binned, X_new)]),
+        n_bins=binned.n_bins, split_value=binned.split_value,
+        uppers=binned.uppers)
 
 
 def fit_tree_hist(binned: BinnedFeatures, y: np.ndarray, *,
@@ -398,6 +430,48 @@ class BoostedTreesRegressor:
             self.trees_.append(tree)
             pred = pred + self.learning_rate * (
                 tpred if tpred is not None else tree.predict(X))
+        self._packed = None
+        return self
+
+    def fit_more(self, X: np.ndarray, y: np.ndarray, n_more: int, *,
+                 binned: BinnedFeatures | None = None,
+                 ) -> "BoostedTreesRegressor":
+        """Continue boosting: append ``n_more`` trees fit on ``(X, y)``.
+
+        The existing ensemble (``base_`` + ``trees_``) is kept and the new
+        trees chase the residuals ``y - predict(X)`` — warm refit from
+        live observations instead of a full retrain.  ``X`` need not be
+        the original training matrix; with ``tree_method="hist"`` pass a
+        precomputed ``binned`` (e.g. grown incrementally via
+        ``append_rows``) to skip the quantile pass entirely.  New trees
+        always fit the full row set (``subsample`` applies to ``fit``
+        only).
+        """
+        if not self.trees_:
+            raise ValueError("fit_more needs a fitted ensemble; call fit first")
+        X = np.asarray(X, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        if X.ndim != 2 or len(X) != len(y):
+            raise ValueError("X must be (n, d) and aligned with y")
+        if self.tree_method == "hist" and binned is None:
+            binned = bin_features(X, self.max_bins)
+        if binned is not None and len(binned.codes) != len(y):
+            raise ValueError("binned row count does not match y")
+        pred = self.predict(X)
+        idx = np.arange(len(y))
+        for _ in range(n_more):
+            resid = y - pred
+            if binned is not None:
+                tree, tpred = fit_tree_hist(
+                    binned, resid, row_idx=idx, max_depth=self.max_depth,
+                    min_samples_leaf=self.min_samples_leaf, return_pred=True)
+            else:
+                tree = fit_tree(X, resid, max_depth=self.max_depth,
+                                min_samples_leaf=self.min_samples_leaf,
+                                max_bins=self.max_bins)
+                tpred = tree.predict(X)
+            self.trees_.append(tree)
+            pred = pred + self.learning_rate * tpred
         self._packed = None
         return self
 

@@ -40,17 +40,30 @@ class DeviceGroup:
 
 
 def proportional_rebalance(fraction: float, t_a: float, t_b: float,
-                           damping: float = 0.5) -> float:
+                           damping: float = 0.5,
+                           min_fraction: float = 1e-3) -> float:
     """New fraction for group A from observed per-group times.
 
     Observed rates: r_a = f/t_a, r_b = (1-f)/t_b; the equal-finish-time
     split is r_a/(r_a+r_b).  ``damping`` smooths measurement noise.
+
+    Degenerate measurements (zero or negative time on either side —
+    clock skew, dropped timer) carry no rate information, so the current
+    split is kept.  The result is always clamped to
+    ``[min_fraction, 1 - min_fraction]``: a group may be starved of
+    *almost* all work but never permanently — it keeps receiving a sliver
+    of each batch, so a recovered straggler produces a finite time and
+    wins work back.  (The N-group generalization is
+    ``repro.runtime.scheduler.ewma_rebalance``.)
     """
-    f = min(max(fraction, 1e-3), 1 - 1e-3)
-    r_a = f / max(t_a, 1e-9)
-    r_b = (1.0 - f) / max(t_b, 1e-9)
+    f = min(max(fraction, min_fraction), 1.0 - min_fraction)
+    if t_a <= 0.0 or t_b <= 0.0:
+        return float(f)
+    r_a = f / t_a
+    r_b = (1.0 - f) / t_b
     target = r_a / (r_a + r_b)
-    return float((1 - damping) * f + damping * target)
+    out = (1 - damping) * f + damping * target
+    return float(min(max(out, min_fraction), 1.0 - min_fraction))
 
 
 class HeterogeneousRunner:
@@ -108,9 +121,24 @@ class HeterogeneousRunner:
         return rec
 
     # -- the paper's offline search over the fraction space -------------------
+    def workload(self, batch: dict) -> dict:
+        """Workload-signature payload for the tuning cache: batch shapes
+        plus the device-group topology (see ``repro.runtime.store``)."""
+        shapes = {k: (tuple(v.shape), str(getattr(v, "dtype", "")))
+                  for k, v in sorted(batch.items())}
+        groups = [(g.name, len(g.devices), g.work_multiplier)
+                  for g in (self.group_a, self.group_b)]
+        return {"batch": shapes, "groups": groups}
+
     def tune_fraction_sa(self, batch: dict, *, iterations: int = 30,
-                         seed: int = 0) -> float:
-        """SAM over {fraction}: simulated annealing with measured energy."""
+                         seed: int = 0, store=None) -> float:
+        """SAM over {fraction}: simulated annealing with measured energy.
+
+        ``store`` (a ``repro.runtime.store.TuningStore`` or a path)
+        short-circuits repeated tuning: a hit on this workload's
+        signature returns the recorded best fraction with zero new
+        measurements, and a miss records the search result for next time.
+        """
         from .autotuner import Autotuner
         from .space import ConfigSpace, Param
 
@@ -122,7 +150,9 @@ class HeterogeneousRunner:
             rec = self.step(batch, rebalance=False)
             return rec["t_step"]
 
-        tuner = Autotuner(space, measure)
-        report = tuner.tune_sam(iterations=iterations, seed=seed)
+        tuner = Autotuner(space, measure, warm_start=store, record_to=store,
+                          workload=self.workload(batch) if store is not None
+                          else None)
+        report = tuner.tune("SAM", iterations=iterations, seed=seed)
         self.fraction = report.best_config["fraction"] / 100.0
         return self.fraction

@@ -30,7 +30,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .sharding import MeshRules
 
-__all__ = ["constrain", "current_rules", "use_rules"]
+__all__ = ["constrain", "constrain_leading", "current_rules", "use_rules"]
 
 _STATE = threading.local()
 
@@ -81,3 +81,23 @@ def constrain(x: Any, *names: str | None) -> Any:
         return x
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(rules.mesh, P(*dims)))
+
+
+def constrain_leading(tree: Any, name: str = "batch") -> Any:
+    """Constrain dimension 0 of every array leaf to logical axis ``name``.
+
+    The chunked scheduler (``repro.runtime.scheduler``) annotates each
+    dispatched chunk this way: chunks are row slices of a batch pytree,
+    so only the leading dimension carries the data-parallel layout.
+    Like ``constrain`` this is the identity when no rules are installed.
+    """
+    if current_rules() is None:
+        return tree
+
+    def leaf(x):
+        ndim = getattr(x, "ndim", None)
+        if not ndim:            # scalars and non-arrays pass through
+            return x
+        return constrain(x, name, *([None] * (ndim - 1)))
+
+    return jax.tree.map(leaf, tree)

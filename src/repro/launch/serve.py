@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
         --batch 4 --prompt-len 32 --gen 16
+
+``--stream`` switches to the online runtime: request batches flow
+through ``repro.runtime.StreamingPipeline``, each batch chunk-scheduled
+across device groups (``--slow N`` reserves the last N devices as a
+second group), and the EWMA controller adapts the split per request mix.
 """
 
 from __future__ import annotations
@@ -12,8 +17,10 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .. import configs
+from ..core.hetero import DeviceGroup
 from ..dist.api import use_rules
 from ..dist.sharding import ShardingConfig
 from ..models import build_model
@@ -81,6 +88,72 @@ def serve_session(cfg, *, batch: int, prompt_len: int, gen: int,
     }
 
 
+def serve_stream(cfg, *, groups: list[DeviceGroup], n_batches: int = 4,
+                 batch: int = 8, prompt_len: int = 16, gen: int = 8,
+                 seed: int = 0, chunks_per_group: int = 2,
+                 row_quantum: int = 2, controller=None) -> dict:
+    """Adaptive serving: chunk-schedule request batches across groups.
+
+    Each group holds its own (replicated) copy of the params and runs
+    full prefill+decode for the request rows it is handed; the
+    ``StreamingPipeline``'s EWMA controller moves rows between groups as
+    measured per-chunk times come in, so the split tracks the live
+    request mix and relative group speed.  Decoder-only models.
+    ``row_quantum`` coarsens chunk sizes (prefill/decode re-jit per
+    distinct chunk shape, so coarse quanta keep the compiled-shape set
+    small while the split drifts).
+    """
+    from ..runtime import StreamingPipeline
+
+    if cfg.encdec:
+        raise ValueError("serve_stream supports decoder-only models")
+    n_devices = sum(len(g.devices) for g in groups)
+    if batch < n_devices:
+        raise ValueError(
+            f"--batch {batch} is smaller than one request per device "
+            f"({n_devices}); raise --batch or use fewer devices/groups")
+    model = build_model(cfg)
+    max_len = prompt_len + gen
+
+    def step_builder(group: DeviceGroup):
+        mesh = group.mesh()
+        scfg = ShardingConfig(data_axes=mesh.axis_names[:1], model_axes=(),
+                              fsdp_axes=(), kv_shard="none", remat=False)
+        rules = scfg.rules(mesh)
+        with set_mesh(mesh), use_rules(rules):
+            params = jax.jit(model.init)(jax.random.PRNGKey(seed))
+        params = jax.device_put(params, NamedSharding(mesh, P()))
+        prefill = jax.jit(lambda p, t: model.prefill(p, t, max_len=max_len))
+        decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+        def fn(chunk):
+            with set_mesh(mesh), use_rules(rules):
+                logits, state = prefill(params, chunk["tokens"])
+                last = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+                outs = [last]
+                for i in range(gen - 1):
+                    logits, state = decode(params, state, last,
+                                           jnp.int32(prompt_len + i))
+                    last = jnp.argmax(logits[:, -1:],
+                                      axis=-1).astype(jnp.int32)
+                    outs.append(last)
+                return jnp.concatenate(outs, axis=1)
+        return fn
+
+    pipeline = StreamingPipeline(step_builder, groups,
+                                 chunks_per_group=chunks_per_group,
+                                 row_quantum=row_quantum,
+                                 controller=controller)
+    rng = np.random.default_rng(seed)
+    batches = [{"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)}
+        for _ in range(n_batches)]
+    records = pipeline.run(batches)
+    summary = pipeline.summary()
+    summary["tokens_per_s_mean"] = summary["rows_per_s_mean"] * gen
+    return {"records": records, "summary": summary}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b", choices=configs.ARCH_NAMES)
@@ -88,10 +161,32 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--stream", action="store_true",
+                    help="adaptive chunk-scheduled serving (repro.runtime)")
+    ap.add_argument("--stream-batches", type=int, default=4)
+    ap.add_argument("--slow", type=int, default=0,
+                    help="reserve the last N devices as a second group")
     args = ap.parse_args()
     cfg = configs.get(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
+    if args.stream:
+        # the scheduler needs >= 1 request row per device: on small
+        # --batch runs use only as many devices as there are rows
+        devs = jax.devices()[:max(args.batch, 1)]
+        if 0 < args.slow < len(devs):
+            groups = [DeviceGroup("fast", devs[:-args.slow]),
+                      DeviceGroup("slow", devs[-args.slow:])]
+        else:
+            groups = [DeviceGroup("all", devs)]
+        out = serve_stream(cfg, groups=groups, n_batches=args.stream_batches,
+                           batch=args.batch, prompt_len=args.prompt_len,
+                           gen=args.gen)
+        s = out["summary"]
+        print(f"stream: {s['batches']} batches  "
+              f"{s['tokens_per_s_mean']:.1f} tok/s  "
+              f"shares {s['shares_final']}")
+        return
     out = serve_session(cfg, batch=args.batch, prompt_len=args.prompt_len,
                         gen=args.gen)
     print(f"prefill {out['prefill_s']:.2f}s  decode {out['decode_s']:.2f}s  "

@@ -1,0 +1,44 @@
+"""Online work-distribution runtime: the paper's tuner made live.
+
+The offline layer (``repro.core``) finds a near-optimal static work
+split with SAML and throws the result away; this package keeps the loop
+closed at run time (usage guide: ``docs/runtime.md``):
+
+``scheduler`` — chunked online dispatch.
+    :class:`~repro.runtime.scheduler.ChunkedScheduler` splits each batch
+    into device-aligned chunks, overlaps dispatch across N
+    ``DeviceGroup``s (double-buffered, bounded in-flight depth) and
+    rebalances the split from measured per-chunk times via
+    :func:`~repro.runtime.scheduler.ewma_rebalance` — the N-group
+    generalization of ``proportional_rebalance``.
+
+``feedback`` — online surrogate refits.
+    :class:`~repro.runtime.feedback.OnlineSurrogateLoop` appends live
+    (config, time) observations and warm-refits the BDTR pair in place
+    (``fit_more`` + incremental hist binning), so the next
+    ``tune_saml`` searches a surrogate grounded in live data.
+
+``store`` — persistent tuning cache.
+    :class:`~repro.runtime.store.TuningStore` keys recorded
+    ``TuneReport``s by workload signature (space hash + shapes + device
+    topology); ``Autotuner(warm_start=, record_to=)`` serves repeated
+    workloads with zero new measurements.
+
+``stream`` — streaming pipeline scenario.
+    :class:`~repro.runtime.stream.StreamingPipeline` drives a stream of
+    batches with overlapped transfer/compute per chunk;
+    ``launch/serve.py`` uses it so serving sessions adapt their split
+    per request mix.
+"""
+
+from .feedback import OnlineSurrogateLoop
+from .scheduler import ChunkedScheduler, EwmaController, ewma_rebalance
+from .store import TuningStore, space_fingerprint, workload_signature
+from .stream import StreamingPipeline, dna_stream_builder
+
+__all__ = [
+    "ChunkedScheduler", "EwmaController", "ewma_rebalance",
+    "OnlineSurrogateLoop",
+    "TuningStore", "space_fingerprint", "workload_signature",
+    "StreamingPipeline", "dna_stream_builder",
+]

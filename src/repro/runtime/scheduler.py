@@ -1,0 +1,307 @@
+"""Chunked online work distribution across N device groups.
+
+``HeterogeneousRunner`` (the paper's runtime, ``core/hetero.py``) does
+one static split per batch: each group gets its whole share in a single
+dispatch, and the split moves only between batches.  This module turns
+that into a live scheduler:
+
+  * each incoming batch is split into **chunks** (row slices aligned to
+    each group's device count);
+  * chunks are dispatched **asynchronously** and interleaved across
+    groups, with at most ``inflight`` chunks outstanding per group —
+    JAX's async dispatch overlaps chunk k+1's transfer/launch with chunk
+    k's compute (double buffering), and the inflight bound keeps live
+    buffers constant;
+  * per-chunk completion times feed an **EWMA controller**
+    (``ewma_rebalance``) that re-splits the next batch — the N-group
+    generalization of ``core.hetero.proportional_rebalance``.
+
+Chunk inputs are annotated with ``dist.api.constrain_leading`` so that
+when mesh rules are installed (see ``docs/dist.md``) each chunk carries
+its data-parallel layout into jit.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import numpy as np
+
+import jax
+
+from ..core.hetero import DeviceGroup
+from ..dist.api import constrain_leading
+
+__all__ = ["ChunkedScheduler", "EwmaController", "ewma_rebalance"]
+
+
+def _project_simplex_floor(w: np.ndarray, floor: float) -> np.ndarray:
+    """Nearest share vector with ``sum == 1`` and every entry ``>= floor``
+    (scales the above-floor mass uniformly)."""
+    n = len(w)
+    free = 1.0 - floor * n
+    if free <= 0:
+        return np.full(n, 1.0 / n)
+    slack = np.maximum(np.asarray(w, dtype=np.float64) - floor, 0.0)
+    total = slack.sum()
+    if total <= 0:
+        return np.full(n, 1.0 / n)
+    return floor + slack * (free / total)
+
+
+def ewma_rebalance(shares: Sequence[float], times: Sequence[float],
+                   damping: float = 0.5, min_share: float = 0.01,
+                   rows: Sequence[int] | None = None) -> np.ndarray:
+    """New work shares from observed per-group times (N groups).
+
+    Rates are ``r_i = rows_i / t_i`` (or ``shares_i / t_i`` when row
+    counts are not given); the equal-finish-time target is
+    ``r_i / sum(r)``, and the update is the EWMA
+    ``(1 - damping) * shares + damping * target`` — for two groups with
+    ``rows=None`` this is exactly ``proportional_rebalance``.  Degenerate
+    measurements (any ``t_i <= 0``) keep the current shares; the result
+    is clamped to ``>= min_share`` per group so no group is ever starved
+    permanently.
+    """
+    shares = _project_simplex_floor(np.asarray(shares, np.float64), min_share)
+    times = np.asarray(times, dtype=np.float64)
+    if times.shape != shares.shape:
+        raise ValueError("times must align with shares")
+    if (times <= 0.0).any():
+        return shares
+    work = shares if rows is None else np.asarray(rows, dtype=np.float64)
+    rates = work / times
+    target = rates / rates.sum()
+    out = (1.0 - damping) * shares + damping * target
+    return _project_simplex_floor(out, min_share)
+
+
+@dataclass
+class EwmaController:
+    """Stateful wrapper around ``ewma_rebalance`` holding current shares."""
+
+    n_groups: int
+    damping: float = 0.5
+    min_share: float = 0.01
+    shares: np.ndarray = field(default=None)  # type: ignore[assignment]
+
+    def __post_init__(self):
+        if self.n_groups < 1:
+            raise ValueError("need at least one group")
+        if self.shares is None:
+            self.shares = np.full(self.n_groups, 1.0 / self.n_groups)
+        self.shares = _project_simplex_floor(
+            np.asarray(self.shares, np.float64), self.min_share)
+        if len(self.shares) != self.n_groups:
+            raise ValueError("shares must have one entry per group")
+
+    def update(self, times: Sequence[float],
+               rows: Sequence[int] | None = None) -> np.ndarray:
+        self.shares = ewma_rebalance(self.shares, times, self.damping,
+                                     self.min_share, rows=rows)
+        return self.shares
+
+
+class ChunkedScheduler:
+    """Split each batch into chunks, overlap dispatch across N groups,
+    and rebalance the split online from measured per-chunk times."""
+
+    def __init__(self, step_builder: Callable[[DeviceGroup], Callable],
+                 groups: Sequence[DeviceGroup], *,
+                 controller: EwmaController | None = None,
+                 chunks_per_group: int = 2, inflight: int = 2,
+                 row_quantum: int = 1):
+        """``step_builder(group)`` returns ``fn(chunk) -> result`` exactly
+        as for ``HeterogeneousRunner`` (results block via
+        ``block_until_ready`` leaves).  ``chunks_per_group`` bounds how
+        finely each group's share is sliced; ``inflight`` is the per-group
+        dispatch depth (2 = double buffering).  ``row_quantum`` coarsens
+        chunk-size rounding to multiples of ``quantum * n_devices`` rows:
+        jitted step functions recompile per distinct chunk shape, so a
+        coarser quantum keeps the shape set small while shares drift."""
+        if not groups:
+            raise ValueError("need at least one device group")
+        if chunks_per_group < 1 or inflight < 1 or row_quantum < 1:
+            raise ValueError("chunks_per_group, inflight and row_quantum "
+                             "must be >= 1")
+        self.groups = list(groups)
+        self.controller = controller or EwmaController(len(self.groups))
+        if self.controller.n_groups != len(self.groups):
+            raise ValueError("controller group count mismatch")
+        self.chunks_per_group = chunks_per_group
+        self.inflight = inflight
+        self.row_quantum = row_quantum
+        self._fns = [step_builder(g) for g in self.groups]
+        self.history: list[dict] = []
+
+    @property
+    def shares(self) -> np.ndarray:
+        return self.controller.shares
+
+    # -- planning ----------------------------------------------------------
+    def plan_rows(self, n: int) -> list[int]:
+        """Per-group row counts for a batch of ``n`` rows.
+
+        Every group gets at least one device-aligned sliver; all groups
+        except the largest-share one are rounded to multiples of their
+        device count, and the largest-share group absorbs the remainder
+        (exactly aligned whenever ``n`` divides by the total device
+        count and groups are equally sized, as in the tests/benchmarks).
+        """
+        align = [len(g.devices) for g in self.groups]
+        if n < sum(align):
+            raise ValueError(f"batch of {n} rows is smaller than one row "
+                             f"per device ({sum(align)})")
+        shares = self.controller.shares
+        big = int(np.argmax(shares))
+        rows = [0] * len(self.groups)
+        for i, (g, s) in enumerate(zip(align, shares)):
+            if i == big:
+                continue
+            q = g * self.row_quantum            # shape-stable rounding
+            rows[i] = max(int(round(n * s / q)) * q, g)
+        rest = n - sum(rows)
+        while rest < align[big]:
+            # reclaim alignment units from the largest other group so the
+            # largest-share group is never starved (n >= sum(align)
+            # guarantees termination: with every other group at its
+            # minimum, rest >= align[big])
+            cands = [i for i in range(len(rows))
+                     if i != big and rows[i] > align[i]]
+            j = max(cands, key=lambda i: rows[i])
+            rows[j] -= align[j]
+            rest += align[j]
+        rows[big] = rest
+        return rows
+
+    def _chunk_sizes(self, rows: int, align: int) -> list[int]:
+        """Split one group's share into up to ``chunks_per_group`` aligned
+        chunks (first chunk takes any residual); rounding uses the row
+        quantum so chunk shapes stay stable as shares drift."""
+        q = align * self.row_quantum
+        per = rows // (self.chunks_per_group * q) * q
+        if per == 0:
+            per = rows // (self.chunks_per_group * align) * align
+        if per == 0:
+            return [rows]
+        sizes = [per] * self.chunks_per_group
+        sizes[0] += rows - per * self.chunks_per_group
+        return [s for s in sizes if s > 0]
+
+    @staticmethod
+    def _block(result) -> None:
+        for leaf in jax.tree.leaves(result):
+            blocker = getattr(leaf, "block_until_ready", None)
+            if blocker is not None:
+                blocker()
+
+    @staticmethod
+    def _is_ready(result) -> bool | None:
+        """True/False when every blockable leaf answers ``is_ready``;
+        None when some leaf can only block (duck-typed results)."""
+        ready = True
+        for leaf in jax.tree.leaves(result):
+            probe = getattr(leaf, "is_ready", None)
+            if probe is None:
+                if getattr(leaf, "block_until_ready", None) is not None:
+                    return None
+                continue
+            if not probe():
+                ready = False
+        return ready
+
+    # -- the online step ---------------------------------------------------
+    def step(self, batch: dict, rebalance: bool = True) -> dict:
+        """Dispatch one batch; returns the step record (and appends it to
+        ``history``)."""
+        n = jax.tree.leaves(batch)[0].shape[0]
+        rows = self.plan_rows(n)
+
+        # contiguous per-group row ranges, then per-group chunk slices
+        offsets = np.concatenate([[0], np.cumsum(rows)])
+        chunks: list[list[dict]] = []
+        for gi, g in enumerate(self.groups):
+            sizes = self._chunk_sizes(rows[gi], len(g.devices))
+            lo = int(offsets[gi])
+            group_chunks = []
+            for s in sizes:
+                sl = jax.tree.map(lambda x, lo=lo, s=s: x[lo:lo + s], batch)
+                group_chunks.append(constrain_leading(sl))
+                lo += s
+            chunks.append(group_chunks)
+
+        t0 = time.perf_counter()
+        pending: list[deque] = [deque() for _ in self.groups]
+        t_done = [0.0] * len(self.groups)
+        chunk_times: list[list[float]] = [[] for _ in self.groups]
+
+        def record(gi: int) -> None:
+            t = time.perf_counter() - t0
+            chunk_times[gi].append(t)
+            t_done[gi] = t
+
+        def drain_one(gi: int) -> None:
+            self._block(pending[gi].popleft())
+            record(gi)
+
+        def poll_sweep() -> bool:
+            """Non-blockingly pop every already-completed head chunk so
+            completion timestamps are recorded close to when they happen.
+            Returns False when some head result is poll-incapable."""
+            pollable = True
+            for gi, q in enumerate(pending):
+                while q:
+                    ready = self._is_ready(q[0])
+                    if ready is None:
+                        pollable = False
+                        break
+                    if not ready:
+                        break
+                    q.popleft()
+                    record(gi)
+            return pollable
+
+        # interleave dispatch round-robin by chunk index so every group
+        # starts working immediately; bound the per-group queue depth
+        max_chunks = max(len(c) for c in chunks)
+        for ci in range(max_chunks):
+            for gi in range(len(self.groups)):
+                if ci >= len(chunks[gi]):
+                    continue
+                if len(pending[gi]) >= self.inflight:
+                    drain_one(gi)
+                pending[gi].append(self._fns[gi](chunks[gi][ci]))
+            poll_sweep()
+        # drain by polling so a fast group's finish time is never inflated
+        # to a slower group's (blocking group-by-group would timestamp a
+        # later-indexed fast group at the slow group's completion); fall
+        # back to ordered blocking for results that cannot be polled
+        while any(pending):
+            if not poll_sweep():
+                for gi in range(len(self.groups)):
+                    while pending[gi]:
+                        drain_one(gi)
+                break
+            if any(pending):
+                time.sleep(2e-5)
+
+        times = [max(t, 1e-9) for t in t_done]
+        rec = {
+            "shares": self.controller.shares.copy(),
+            "rows": list(rows),
+            "n_chunks": [len(c) for c in chunks],
+            "t_group": times,
+            "t_chunks": chunk_times,
+            "t_step": max(times),
+        }
+        self.history.append(rec)
+        if rebalance:
+            self.controller.update(times, rows=rows)
+        return rec
+
+    def run(self, batches, rebalance: bool = True) -> list[dict]:
+        """Drive a stream of batches; returns the step records."""
+        return [self.step(b, rebalance=rebalance) for b in batches]

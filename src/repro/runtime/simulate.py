@@ -1,0 +1,75 @@
+"""Simulated serial device groups for tests and benchmarks.
+
+Forced host devices share one CPU thread pool, so wall-clock ratios
+between *concurrently* dispatched groups are meaningless there (see
+``docs/dist.md``).  Schedulers are therefore exercised against this
+timing model: dispatch returns immediately (async, like JAX), but a
+group's chunks execute serially — chunk k+1 starts when chunk k
+finishes — at ``per_row_s * work_multiplier / n_devices`` seconds per
+row.  ``SimReadyAt`` mimics ``jax.Array``'s completion surface
+(``block_until_ready`` + ``is_ready``), so the chunked scheduler's
+poll-based completion timestamps are exact for sims too.
+
+Shared by ``tests/helpers.py`` and ``benchmarks/bench_runtime.py`` —
+one copy of the semantics.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from ..core.hetero import DeviceGroup
+
+__all__ = ["FakeDevice", "SimReadyAt", "make_serial_sim_builder",
+           "sim_skew_groups"]
+
+
+class SimReadyAt:
+    """jax.Array-style result of an emulated dispatch: ready at an
+    absolute ``time.perf_counter()`` instant."""
+
+    def __init__(self, value, done_at: float):
+        self.value = value
+        self._done_at = done_at
+
+    def is_ready(self) -> bool:
+        return time.perf_counter() >= self._done_at
+
+    def block_until_ready(self):
+        time.sleep(max(0.0, self._done_at - time.perf_counter()))
+        return self
+
+
+class FakeDevice:
+    """Placeholder device for sim-only DeviceGroups (never dispatched to)."""
+
+
+def make_serial_sim_builder(per_row_s: float = 0.0005):
+    """Step-builder factory emulating groups of serial devices (one
+    queue tail per group; see module docstring for the timing model)."""
+    tails: dict[int, float] = {}
+
+    def builder(group: DeviceGroup):
+        key = id(group)
+        per = per_row_s * group.work_multiplier / len(group.devices)
+
+        def fn(chunk):
+            n = jax.tree.leaves(chunk)[0].shape[0]
+            start = max(time.perf_counter(), tails.get(key, 0.0))
+            tails[key] = start + per * n
+            return SimReadyAt(None, tails[key])
+
+        return fn
+
+    return builder
+
+
+def sim_skew_groups(skew: int = 3, n_fast: int = 4, n_slow: int = 4,
+                    fast_first: bool = True) -> list[DeviceGroup]:
+    """A fast + slow group pair with a per-row speed skew; ``fast_first``
+    flips the ordering (schedulers must not care)."""
+    fast = DeviceGroup("fast", [FakeDevice()] * n_fast)
+    slow = DeviceGroup("slow", [FakeDevice()] * n_slow, work_multiplier=skew)
+    return [fast, slow] if fast_first else [slow, fast]

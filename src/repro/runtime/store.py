@@ -1,0 +1,176 @@
+"""Persistent tuning cache keyed by workload signature.
+
+Tuned configurations are expensive — the paper's SAML still costs
+hundreds of measurements per workload — and the seed threw them away
+after every run.  ``TuningStore`` persists ``TuneReport``s to a JSON
+file keyed by a **workload signature**: a hash of the config space
+(names, values, ordinality), a caller-supplied workload payload (batch
+shapes, request mix, anything that changes measured times) and the
+device topology.  A repeated workload is served from the cache with
+zero new measurements; any change to space, workload or topology
+changes the signature and forces a fresh search.
+
+``Autotuner`` consumes this through its ``warm_start=`` / ``record_to=``
+knobs (``core/autotuner.py``); the online feedback loop
+(``runtime/feedback.py``) persists its observation arrays next to the
+JSON via the NPZ side-car helpers.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from dataclasses import asdict
+from pathlib import Path
+from typing import Any, Mapping
+
+import numpy as np
+
+from ..core.autotuner import TuneReport
+from ..core.space import ConfigSpace
+
+__all__ = ["TuningStore", "space_fingerprint", "workload_signature"]
+
+
+def _canon(obj: Any):
+    """Canonicalize a workload payload for hashing: tuples -> lists,
+    numpy scalars/arrays -> python, dict keys -> str, sorted."""
+    if isinstance(obj, Mapping):
+        return {str(k): _canon(obj[k]) for k in sorted(obj, key=str)}
+    if isinstance(obj, (list, tuple)):
+        return [_canon(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return [_canon(v) for v in obj.tolist()]
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return repr(obj)
+
+
+def _sha(payload: Any) -> str:
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def space_fingerprint(space: ConfigSpace) -> str:
+    """Hash of the space structure: parameter names, domains, ordinality."""
+    return _sha([[p.name, _canon(p.values), bool(p.ordinal)]
+                 for p in space.params])[:16]
+
+
+def device_topology() -> list[list]:
+    """Summary of the visible JAX devices: (platform, kind, count)."""
+    import jax
+
+    counts: dict[tuple, int] = {}
+    for d in jax.devices():
+        key = (d.platform, getattr(d, "device_kind", ""))
+        counts[key] = counts.get(key, 0) + 1
+    return [[p, k, n] for (p, k), n in sorted(counts.items())]
+
+
+def workload_signature(space: ConfigSpace,
+                       workload: Mapping[str, Any] | None = None,
+                       devices: Any = None) -> str:
+    """Cache key: space hash + workload payload + device topology.
+
+    ``devices`` defaults to the live ``jax.devices()`` summary; pass an
+    explicit value (any canonicalizable object) to pin the signature in
+    tests or across hosts.
+    """
+    return _sha({
+        "space": space_fingerprint(space),
+        "workload": _canon(workload),
+        "devices": _canon(devices if devices is not None
+                          else device_topology()),
+    })
+
+
+def _report_to_json(report: TuneReport) -> dict:
+    d = asdict(report)
+    d["checkpoints"] = {str(k): [e, cfg]
+                        for k, (e, cfg) in report.checkpoints.items()}
+    return d
+
+
+def _report_from_json(d: Mapping[str, Any]) -> TuneReport:
+    kw = dict(d)
+    kw["checkpoints"] = {int(k): (float(e), dict(cfg))
+                         for k, (e, cfg) in d.get("checkpoints", {}).items()}
+    kw["from_cache"] = True
+    return TuneReport(**kw)
+
+
+class TuningStore:
+    """JSON-backed map: workload signature -> recorded ``TuneReport``s.
+
+    One store file holds many workloads; each entry keeps one report per
+    strategy.  ``lookup``/``record`` are what ``Autotuner.tune`` calls;
+    ``save_observations``/``load_observations`` persist feedback-loop
+    arrays as an NPZ side-car per signature.
+    """
+
+    def __init__(self, path: str | os.PathLike, *, devices: Any = None):
+        self.path = Path(path)
+        self.devices = devices          # pin topology, or None for live
+        self._data: dict[str, dict] = {}
+        if self.path.exists():
+            self._data = json.loads(self.path.read_text())
+
+    # -- keys --------------------------------------------------------------
+    def signature(self, space: ConfigSpace,
+                  workload: Mapping[str, Any] | None) -> str:
+        return workload_signature(space, workload, devices=self.devices)
+
+    # -- report cache -------------------------------------------------------
+    def lookup(self, space: ConfigSpace,
+               workload: Mapping[str, Any] | None,
+               strategy: str) -> TuneReport | None:
+        entry = self._data.get(self.signature(space, workload))
+        if entry is None or strategy.upper() not in entry.get("reports", {}):
+            return None
+        return _report_from_json(entry["reports"][strategy.upper()])
+
+    def record(self, space: ConfigSpace,
+               workload: Mapping[str, Any] | None,
+               strategy: str, report: TuneReport) -> str:
+        sig = self.signature(space, workload)
+        entry = self._data.setdefault(sig, {
+            "space": space_fingerprint(space),
+            "workload": _canon(workload),
+            "reports": {},
+        })
+        entry["reports"][strategy.upper()] = _report_to_json(report)
+        self._flush()
+        return sig
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def _flush(self) -> None:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = self.path.with_suffix(self.path.suffix + ".tmp")
+        tmp.write_text(json.dumps(self._data, indent=1, sort_keys=True))
+        os.replace(tmp, self.path)
+
+    # -- observation side-car (NPZ) ----------------------------------------
+    def _npz_path(self, sig: str) -> Path:
+        return self.path.parent / f"{self.path.stem}-{sig[:16]}.npz"
+
+    def save_observations(self, sig: str, **arrays: np.ndarray) -> Path:
+        """Persist feedback-loop arrays (e.g. host_X/host_y/dev_X/dev_y)."""
+        out = self._npz_path(sig)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        np.savez(out, **{k: np.asarray(v) for k, v in arrays.items()})
+        return out
+
+    def load_observations(self, sig: str) -> dict[str, np.ndarray] | None:
+        p = self._npz_path(sig)
+        if not p.exists():
+            return None
+        with np.load(p) as z:
+            return {k: z[k] for k in z.files}

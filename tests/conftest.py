@@ -1,10 +1,15 @@
 """Shared test configuration.
 
 One concern: **hypothesis fallback** — the property tests use
-``hypothesis`` when it is installed (``pip install -e .[dev]``), but the
-bare container only ships pytest.  When ``hypothesis`` is absent we
-install a tiny shim into ``sys.modules`` whose ``@given`` marks the test
-as skipped, so the rest of each module still collects and runs.
+``hypothesis`` when it is installed (``pip install -e .[dev]``, and CI
+installs it), but the bare container only ships pytest.  When
+``hypothesis`` is absent we install a *working* mini-implementation into
+``sys.modules``: ``@given`` runs the test body over ``max_examples``
+seeded draws from the declared strategies instead of skipping, so
+tier-1 exercises the property tests everywhere.  The four property
+tests only use ``st.integers(lo, hi)``; add strategies here if a new
+test needs them (an unsupported strategy raises at collection, not
+silently passes).
 
 The distributed suites (``test_distributed.py``, ``test_roofline.py``,
 ``test_fault_tolerance.py``, ``test_dryrun_integration.py``, the
@@ -18,32 +23,82 @@ from __future__ import annotations
 import sys
 import types
 
-import pytest
-
-# -- 1. hypothesis shim -------------------------------------------------------
+# -- 1. hypothesis fallback ---------------------------------------------------
 try:
     import hypothesis  # noqa: F401
 except ImportError:
+    import zlib as _zlib
+
+    import numpy as _np
+
     _hyp = types.ModuleType("hypothesis")
     _st = types.ModuleType("hypothesis.strategies")
+    _DEFAULT_MAX_EXAMPLES = 100
 
-    def _given(*_a, **_k):
+    class _IntegersStrategy:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def draw(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    def _integers(min_value, max_value):
+        return _IntegersStrategy(min_value, max_value)
+
+    def _unsupported(name):
+        def make(*_a, **_k):
+            raise NotImplementedError(
+                f"mini-hypothesis shim has no strategy {name!r} — install "
+                "hypothesis (pip install -e .[dev]) or extend the shim")
+        return make
+
+    def _given(*a, **strategies):
+        if a or not strategies:
+            raise NotImplementedError(
+                "mini-hypothesis shim supports keyword strategies only")
+
         def deco(fn):
-            return pytest.mark.skip(
-                reason="hypothesis not installed (pip install -e .[dev])"
-            )(fn)
+            def runner():
+                n = getattr(fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+                # seeded off the test name so runs are reproducible (crc32,
+                # not hash(): str hashing is salted per process)
+                rng = _np.random.default_rng(
+                    _zlib.crc32(fn.__qualname__.encode()))
+                names = sorted(strategies)
+                for _ in range(n):
+                    kw = {k: strategies[k].draw(rng) for k in names}
+                    try:
+                        fn(**kw)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"property falsified on {kw!r}") from e
+            # copy identity but NOT the signature (no functools.wraps /
+            # __wrapped__: pytest would introspect the wrapped parameters
+            # and demand fixtures for them)
+            for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+                setattr(runner, attr, getattr(fn, attr))
+            runner._shim_target = fn
+            return runner
         return deco
 
-    def _settings(*_a, **_k):
-        # usable both as @settings and @settings(...)
-        if len(_a) == 1 and callable(_a[0]) and not _k:
-            return _a[0]
-        return lambda fn: fn
+    def _settings(*a, **kw):
+        # usable both as @settings and @settings(max_examples=..., ...)
+        if len(a) == 1 and callable(a[0]) and not kw:
+            return a[0]
+        n = kw.get("max_examples")
 
-    def _strategy(*_a, **_k):
-        return None
+        def deco(fn):
+            if n is not None:
+                # works in either decorator order: @given reads the attr
+                # off its target at call time, so mark both the function
+                # and (when @settings sits above @given) its shim target
+                getattr(fn, "_shim_target", fn)._shim_max_examples = n
+                fn._shim_max_examples = n
+            return fn
+        return deco
 
-    _st.__getattr__ = lambda name: _strategy  # integers(), floats(), ...
+    _st.integers = _integers
+    _st.__getattr__ = _unsupported
     _hyp.given = _given
     _hyp.settings = _settings
     _hyp.strategies = _st

@@ -29,6 +29,12 @@ class SimReady:
 """
 
 
+# serial-device simulation shared with the benchmarks — one copy of the
+# timing model lives in the library
+from repro.runtime.simulate import (FakeDevice, SimReadyAt,  # noqa: F401
+                                    make_serial_sim_builder, sim_skew_groups)
+
+
 def run_subprocess(code: str, devices: int = 8, timeout: int = 600) -> str:
     """Run python ``code`` in a fresh process with N host platform devices.
 

@@ -48,6 +48,35 @@ def test_rebalance_survives_degenerate_inputs():
             assert 0.0 < out < 1.0
 
 
+def test_rebalance_nonpositive_times_keep_fraction():
+    # zero/negative times carry no rate information: the (clamped)
+    # current split is returned unchanged, never a jump
+    assert proportional_rebalance(0.7, 0.0, 1.0) == pytest.approx(0.7)
+    assert proportional_rebalance(0.7, 1.0, -3.0) == pytest.approx(0.7)
+    assert proportional_rebalance(0.7, -1.0, -1.0) == pytest.approx(0.7)
+
+
+def test_rebalance_output_clamped_away_from_0_and_1():
+    # an arbitrarily faster group cannot drive the other side's share to
+    # exactly 0/1, even undamped
+    hi = proportional_rebalance(0.5, 1e-12, 10.0, damping=1.0)
+    lo = proportional_rebalance(0.5, 10.0, 1e-12, damping=1.0)
+    assert hi <= 1.0 - 1e-3
+    assert lo >= 1e-3
+    # and the floor is tunable
+    assert proportional_rebalance(0.5, 1e-12, 10.0, damping=1.0,
+                                  min_fraction=0.05) == pytest.approx(0.95)
+
+
+def test_rebalance_recovers_from_near_starvation():
+    # group B was starved to the floor while degraded; once it recovers
+    # (now 1x speed) the controller must hand work back
+    f = 1.0 - 1e-3
+    for _ in range(40):
+        f = proportional_rebalance(f, f / 1.0, (1 - f) / 1.0)
+    assert f == pytest.approx(0.5, abs=1e-2)
+
+
 # -- HeterogeneousRunner (multi-device) -----------------------------------------
 
 def test_runner_split_and_tune_fraction_sa():

@@ -1,0 +1,164 @@
+"""repro.runtime.store: persistent tuning cache — round-trip, signature
+invalidation, Autotuner warm-start (0 new measurements on a repeated
+workload), and the HeterogeneousRunner integration."""
+
+import numpy as np
+import pytest
+
+from helpers import FakeDevice, make_serial_sim_builder
+
+from repro.core import Autotuner, ConfigSpace, Param
+from repro.core.hetero import DeviceGroup, HeterogeneousRunner
+from repro.runtime import TuningStore, space_fingerprint, workload_signature
+
+
+def small_space():
+    return ConfigSpace([
+        Param("threads", (1, 2, 4, 8)),
+        Param("fraction", tuple(range(10, 100, 10))),
+    ])
+
+
+def energy(cfg):
+    return abs(cfg["fraction"] - 60) / 10.0 + 4.0 / cfg["threads"]
+
+
+# -- signatures -----------------------------------------------------------------
+
+def test_signature_depends_on_space_workload_and_devices():
+    s1, s2 = small_space(), ConfigSpace([Param("threads", (1, 2))])
+    base = workload_signature(s1, {"shape": (8, 16)}, devices=[["cpu", "", 8]])
+    assert base == workload_signature(s1, {"shape": (8, 16)},
+                                      devices=[["cpu", "", 8]])
+    assert base != workload_signature(s2, {"shape": (8, 16)},
+                                      devices=[["cpu", "", 8]])
+    assert base != workload_signature(s1, {"shape": (16, 16)},
+                                      devices=[["cpu", "", 8]])
+    assert base != workload_signature(s1, {"shape": (8, 16)},
+                                      devices=[["cpu", "", 4]])
+
+
+def test_space_fingerprint_sensitive_to_domain_and_ordinality():
+    a = space_fingerprint(ConfigSpace([Param("x", (1, 2, 3))]))
+    b = space_fingerprint(ConfigSpace([Param("x", (1, 2, 4))]))
+    c = space_fingerprint(ConfigSpace([Param("x", (1, 2, 3), ordinal=False)]))
+    assert len({a, b, c}) == 3
+
+
+# -- round-trip persistence ------------------------------------------------------
+
+def test_report_round_trip(tmp_path):
+    store = TuningStore(tmp_path / "tune.json", devices="pinned")
+    tuner = Autotuner(small_space(), energy, record_to=store,
+                      workload={"w": 1})
+    report = tuner.tune("SAM", iterations=50, seed=0, checkpoints=(10, 25))
+
+    # a fresh store object re-reads the JSON from disk
+    reloaded = TuningStore(tmp_path / "tune.json", devices="pinned")
+    hit = reloaded.lookup(small_space(), {"w": 1}, "sam")
+    assert hit is not None and hit.from_cache
+    assert hit.best_config == report.best_config
+    assert hit.best_energy_measured == pytest.approx(
+        report.best_energy_measured)
+    assert hit.n_experiments == report.n_experiments
+    assert hit.checkpoints == report.checkpoints
+    assert set(type(k) for k in hit.checkpoints) == {int}
+
+
+def test_workload_mismatch_invalidates(tmp_path):
+    store = TuningStore(tmp_path / "tune.json", devices="pinned")
+    Autotuner(small_space(), energy, record_to=store,
+              workload={"shape": [8, 16]}).tune("SAM", iterations=30)
+    assert store.lookup(small_space(), {"shape": [16, 16]}, "SAM") is None
+    assert store.lookup(small_space(), {"shape": [8, 16]}, "EM") is None
+    assert store.lookup(small_space(), {"shape": [8, 16]}, "SAM") is not None
+
+
+# -- the acceptance criterion: 0 new measurements on a repeat --------------------
+
+def test_second_tune_performs_zero_measurements(tmp_path):
+    calls = {"n": 0}
+
+    def counting(cfg):
+        calls["n"] += 1
+        return energy(cfg)
+
+    store = TuningStore(tmp_path / "tune.json", devices="pinned")
+
+    def make_tuner():
+        return Autotuner(small_space(), counting, warm_start=store,
+                         record_to=store, workload={"w": "same"})
+
+    first = make_tuner().tune("SAM", iterations=40, seed=0)
+    assert calls["n"] > 0 and not first.from_cache
+    n_first = calls["n"]
+
+    second = make_tuner().tune("SAM", iterations=40, seed=0)
+    assert calls["n"] == n_first            # zero new measurements
+    assert second.from_cache
+    assert second.best_config == first.best_config
+
+
+def test_path_accepted_for_store_knobs(tmp_path):
+    p = tmp_path / "cache.json"
+    t = Autotuner(small_space(), energy, warm_start=p, record_to=p)
+    assert isinstance(t.warm_start, TuningStore)
+    t.tune("EM")
+    assert Autotuner(small_space(), energy,
+                     warm_start=p).tune("EM").from_cache
+
+
+# -- observation side-car --------------------------------------------------------
+
+def test_observation_npz_round_trip(tmp_path):
+    store = TuningStore(tmp_path / "tune.json", devices="pinned")
+    sig = store.signature(small_space(), {"w": 1})
+    X = np.arange(12.0).reshape(4, 3)
+    y = np.array([1.0, 2.0, 3.0, 4.0])
+    store.save_observations(sig, host_X=X, host_y=y)
+    back = store.load_observations(sig)
+    np.testing.assert_array_equal(back["host_X"], X)
+    np.testing.assert_array_equal(back["host_y"], y)
+    assert store.load_observations("deadbeef" * 8) is None
+
+
+# -- HeterogeneousRunner integration --------------------------------------------
+
+def test_runner_second_invocation_hits_cache(tmp_path):
+    """tune_fraction_sa on an identical workload signature is served from
+    the store: the second runner performs zero step dispatches."""
+    groups = [DeviceGroup("fast", [FakeDevice()] * 4),
+              DeviceGroup("slow", [FakeDevice()] * 4, work_multiplier=3)]
+    store = TuningStore(tmp_path / "hetero.json", devices="pinned")
+    batch = {"x": np.zeros((64, 8), np.float32)}
+
+    def make_runner(counter):
+        builder = make_serial_sim_builder(0.0003)
+
+        def counting_builder(group):
+            inner = builder(group)
+
+            def fn(chunk):
+                counter["n"] += 1
+                return inner(chunk)
+            return fn
+
+        return HeterogeneousRunner(counting_builder, *groups, fraction=0.5)
+
+    c1 = {"n": 0}
+    r1 = make_runner(c1)
+    f1 = r1.tune_fraction_sa(batch, iterations=20, seed=0, store=store)
+    assert c1["n"] > 0
+
+    c2 = {"n": 0}
+    r2 = make_runner(c2)
+    f2 = r2.tune_fraction_sa(batch, iterations=20, seed=0, store=store)
+    assert c2["n"] == 0                     # pure cache hit
+    assert f2 == pytest.approx(f1)
+
+    # a different batch shape is a different workload -> fresh search
+    c3 = {"n": 0}
+    r3 = make_runner(c3)
+    r3.tune_fraction_sa({"x": np.zeros((128, 8), np.float32)},
+                        iterations=20, seed=0, store=store)
+    assert c3["n"] > 0
