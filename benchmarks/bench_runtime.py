@@ -99,6 +99,49 @@ def bench_sim_convergence(*, skew: int = 3, steps: int = 20,
     return out
 
 
+# -- section 1b: offline split tuning through the unified facade ----------------
+
+def bench_session_tuned_split(*, skew: int = 3, iterations: int = 14,
+                              per_row_s: float = 0.0004,
+                              batch_rows: int = 128) -> dict:
+    """Tune the 2-group split offline with a ``repro.tune`` session (the
+    paper's SAM over the fraction space, measured through the chunked
+    scheduler) and compare the tuned static split against the oracle."""
+    from repro.core.space import ConfigSpace, Param
+    from repro.tune import TuningSession
+
+    batch = {"x": np.zeros((batch_rows, 4), np.float32)}
+    controller = EwmaController(2, min_share=0.02)
+    sched = ChunkedScheduler(make_serial_sim_builder(per_row_s),
+                             sim_skew_groups(skew), controller=controller)
+
+    def measure(cfg):
+        f = cfg["fraction"] / 100.0
+        controller.shares = np.asarray([f, 1.0 - f])
+        rec = sched.step(batch, rebalance=False)
+        return {"time": rec["t_step"], "t_host": rec["t_group"][0],
+                "t_device": rec["t_group"][1]}
+
+    space = ConfigSpace([Param("fraction", tuple(range(5, 100, 5)))])
+    session = TuningSession(space, evaluator=measure)
+    result = session.run("sam", iterations=iterations, seed=0)
+
+    oracle = skew / (skew + 1.0)
+    tuned = result.best_config["fraction"] / 100.0
+    out = {
+        "skew": skew,
+        "iterations": iterations,
+        "oracle_fraction": round(oracle, 4),
+        "tuned_fraction": round(tuned, 4),
+        "n_measurements": result.n_experiments,
+        "t_tuned_static_s": round(result.best_energy_measured, 6),
+        "tuned_within": round(abs(tuned - oracle), 4),
+    }
+    # the tuned static split must land within one grid step of the oracle
+    assert abs(tuned - oracle) <= 0.101, out
+    return out
+
+
 # -- section 2: real dispatch on 8 forced host devices --------------------------
 
 def bench_real_dispatch(*, steps: int = 10, rows: int = 256,
@@ -155,7 +198,8 @@ def main() -> None:
     args = ap.parse_args()
 
     t0 = time.perf_counter()
-    results = {"sim_convergence": bench_sim_convergence()}
+    results = {"sim_convergence": bench_sim_convergence(),
+               "session_tuned_split": bench_session_tuned_split()}
     if args.smoke:
         results["real_dispatch"] = bench_real_dispatch(steps=3, rows=64,
                                                        cols=512)
@@ -170,6 +214,9 @@ def main() -> None:
     print(f"sim: online/oracle {sim['online_vs_oracle']}x, converged at "
           f"step {sim['converged_at_step']}, "
           f"{sim['online_vs_naive_speedup']}x over naive 50/50")
+    ts = results["session_tuned_split"]
+    print(f"session: SAM-tuned split {ts['tuned_fraction']} vs oracle "
+          f"{ts['oracle_fraction']} in {ts['n_measurements']} measurements")
     rd = results["real_dispatch"]
     print(f"real: static {rd['t_static_split_s']}s vs online "
           f"{rd['t_online_sched_s']}s on {rd['devices']} devices")

@@ -1,6 +1,9 @@
 """Benchmark: seed scalar search path vs the batched/vectorized engine.
 
-Times three hot paths and writes the results as JSON (BENCH_search.json):
+All searches run through the unified facade (``repro.tune.TuningSession``
+— the legacy ``Autotuner`` is a deprecated shim over the same strategy
+registry, so the timed engines are identical).  Times four hot paths and
+writes the results as JSON (BENCH_search.json):
 
   1. ``bdtr_fit``  — exact-splitter vs histogram-splitter BDTR fitting on
      the paper's 7200-row Emil training grid (2880 host + 4320 device
@@ -13,12 +16,19 @@ Times three hot paths and writes the results as JSON (BENCH_search.json):
      jitted multi-chain vectorized engine (``engine="vectorized"``).
      Total wall-clock (including jit compile) and steady-state (second
      call) are reported separately.
+  4. ``objective_weighted`` — the energy-aware extension (after Memeti &
+     Pllana, arXiv:2106.01441): batched EM under ``Time``, ``Energy`` and
+     ``Weighted(Time, Energy)`` objectives on the simulated platform,
+     reporting how the optimal split moves with the objective.
 
 Usage:
-    PYTHONPATH=src python benchmarks/bench_search.py [--quick] [--out PATH]
+    PYTHONPATH=src python benchmarks/bench_search.py [--smoke] [--json]
+        [--out PATH]
 
-``--quick`` shrinks the space/model so the whole script runs in well under
-a minute (CI smoke); the committed BENCH_search.json comes from a full run.
+``--smoke`` (alias ``--quick``) shrinks the space/model so the whole
+script runs in well under a minute (CI smoke); ``--json`` additionally
+prints the result blob to stdout.  The committed BENCH_search.json comes
+from a full run.
 """
 
 from __future__ import annotations
@@ -30,9 +40,10 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import (Autotuner, BoostedTreesRegressor, DATASETS_GB,
+from repro.core import (BoostedTreesRegressor, DATASETS_GB,
                         EmilPlatformModel, emil_training_grids,
                         fit_emil_surrogates, paper_space, percent_error)
+from repro.tune import Energy, Time, TuningSession, Weighted
 
 GB = DATASETS_GB["human"]
 
@@ -41,6 +52,18 @@ def _timed(fn):
     t0 = time.perf_counter()
     out = fn()
     return time.perf_counter() - t0, out
+
+
+def _session(space, surrogate, n_train, *, batch: bool = False,
+             objective=None) -> TuningSession:
+    plat = EmilPlatformModel()
+    return TuningSession(
+        space,
+        evaluator=lambda c: plat.metrics(c, GB, None),
+        evaluator_batch=(lambda cols: plat.metrics_batch(cols, GB, None))
+        if batch else None,
+        objective=objective, surrogate=surrogate,
+        n_training_experiments=n_train)
 
 
 def bench_bdtr_fit(n_estimators: int, max_depth: int = 5) -> dict:
@@ -81,11 +104,9 @@ def bench_bdtr_fit(n_estimators: int, max_depth: int = 5) -> dict:
 
 
 def bench_eml_sweep(space, surrogate, n_train) -> dict:
-    plat = EmilPlatformModel()
-    tuner = Autotuner(space, measure=lambda c: plat.energy(c, GB, None),
-                      surrogate=surrogate, n_training_experiments=n_train)
-    t_scalar, rep_s = _timed(lambda: tuner.tune_eml(engine="scalar"))
-    t_batched, rep_b = _timed(lambda: tuner.tune_eml(engine="batched"))
+    session = _session(space, surrogate, n_train)
+    t_scalar, rep_s = _timed(lambda: session.run("eml", engine="scalar"))
+    t_batched, rep_b = _timed(lambda: session.run("eml", engine="batched"))
     return {
         "space_size": space.size(),
         "t_scalar_s": round(t_scalar, 4),
@@ -103,25 +124,23 @@ def bench_saml(space, surrogate, n_train, iterations: int,
     """Equal-work comparison: ``n_chains`` seed-path scalar chains run one
     after another (what the seed engine needs for the same search effort)
     vs one vectorized launch advancing all chains in lockstep."""
-    plat = EmilPlatformModel()
-    tuner = Autotuner(space, measure=lambda c: plat.energy(c, GB, None),
-                      surrogate=surrogate, n_training_experiments=n_train)
+    session = _session(space, surrogate, n_train)
 
     def run_scalar_chains():
-        return [tuner.tune_saml(iterations=iterations, seed=1 + k)
+        return [session.run("saml", iterations=iterations, seed=1 + k)
                 for k in range(n_chains)]
 
     t_scalar, reps_s = _timed(run_scalar_chains)
     best_s = min(reps_s, key=lambda r: r.best_energy_search)
-    t_vec_total, rep_v = _timed(lambda: tuner.tune_saml(
-        engine="vectorized", iterations=iterations, seed=1,
+    t_vec_total, rep_v = _timed(lambda: session.run(
+        "saml", engine="vectorized", iterations=iterations, seed=1,
         n_chains=n_chains))
     # second call reuses nothing across calls except warm jit caches —
     # this is the steady-state per-search cost
-    t_vec_steady, rep_v2 = _timed(lambda: tuner.tune_saml(
-        engine="vectorized", iterations=iterations, seed=1,
+    t_vec_steady, rep_v2 = _timed(lambda: session.run(
+        "saml", engine="vectorized", iterations=iterations, seed=1,
         n_chains=n_chains))
-    eml = tuner.tune_eml()
+    eml = session.run("eml")
     n_evals_scalar = sum(r.n_predictions for r in reps_s)
     return {
         "iterations": iterations,
@@ -151,10 +170,47 @@ def bench_saml(space, surrogate, n_train, iterations: int,
     }
 
 
+def bench_objective_weighted(space) -> dict:
+    """Batched full-space EM under three objectives: the time-optimal,
+    energy-optimal and weighted-compromise configs differ (the Phi is the
+    power-hungry side), and the weighted run must land between them."""
+    out: dict = {"space_size": space.size()}
+    ref = {}
+    for name, objective in (
+            ("time", Time()),
+            ("energy", Energy()),
+            ("weighted", Weighted(Time(), Energy(),
+                                  scales=(1.0, 300.0)))):
+        dt, rep = _timed(lambda: _session(space, None, 0, batch=True,
+                                          objective=objective)
+                         .run("em", engine="batched"))
+        ref[name] = rep
+        out[name] = {
+            "t_search_s": round(dt, 4),
+            "best_config": rep.best_config,
+            "best_metrics": {k: round(v, 4)
+                             for k, v in rep.best_metrics.items()
+                             if k in ("time", "energy")},
+        }
+    t_t = ref["time"].best_metrics
+    t_e = ref["energy"].best_metrics
+    t_w = ref["weighted"].best_metrics
+    # positive-weight scalarization: the weighted optimum sits between the
+    # extremes on both axes (it can't beat the time-opt's time or the
+    # energy-opt's energy, and can't be worse than the *other* extreme)
+    out["weighted_between"] = bool(
+        t_t["time"] - 1e-9 <= t_w["time"] <= t_e["time"] + 1e-9
+        and t_e["energy"] - 1e-9 <= t_w["energy"] <= t_t["energy"] + 1e-9)
+    assert out["weighted_between"], out
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--quick", action="store_true",
+    ap.add_argument("--smoke", "--quick", dest="smoke", action="store_true",
                     help="small space / small models (CI smoke)")
+    ap.add_argument("--json", action="store_true",
+                    help="also print the result blob to stdout")
     ap.add_argument("--out", default=str(Path(__file__).resolve()
                                         .parent.parent / "BENCH_search.json"))
     ap.add_argument("--iterations", type=int, default=1000)
@@ -166,8 +222,8 @@ def main() -> None:
 
     # surrogate shared by the search benchmarks; modest ensemble so the
     # *scalar* sweep finishes in minutes — both engines use the same model
-    n_est_search = 10 if args.quick else 40
-    space = paper_space(workload_step=10 if args.quick else 1)
+    n_est_search = 10 if args.smoke else 40
+    space = paper_space(workload_step=10 if args.smoke else 1)
     plat = EmilPlatformModel()
     t_fit, (surrogate, n_train) = _timed(lambda: fit_emil_surrogates(
         plat, GB, datasets_gb=list(DATASETS_GB.values()),
@@ -176,9 +232,9 @@ def main() -> None:
           f"{t_fit:.2f}s")
 
     results = {
-        "quick": bool(args.quick),
+        "quick": bool(args.smoke),
         "space_size": space.size(),
-        "bdtr_fit": bench_bdtr_fit(40 if args.quick else 150),
+        "bdtr_fit": bench_bdtr_fit(40 if args.smoke else 150),
     }
     b = results["bdtr_fit"]
     print(f"[bench] bdtr_fit: exact {b['t_exact_s']}s vs hist "
@@ -191,7 +247,7 @@ def main() -> None:
           f"{e['t_scalar_s']}s vs batched {e['t_batched_s']}s -> "
           f"{e['speedup']}x (same best: {e['same_best_config']})")
 
-    iters = 200 if args.quick else args.iterations
+    iters = 200 if args.smoke else args.iterations
     results["saml"] = bench_saml(space, surrogate, n_train, iters,
                                  args.n_chains)
     s = results["saml"]
@@ -201,7 +257,19 @@ def main() -> None:
           f"{s['speedup_total']}x / {s['speedup_steady']}x "
           f"({s['vectorized_evals_per_s']:.0f} evals/s)")
 
-    Path(args.out).write_text(json.dumps(results, indent=2) + "\n")
+    ow_space = paper_space(workload_step=10 if args.smoke else 2)
+    results["objective_weighted"] = bench_objective_weighted(ow_space)
+    w = results["objective_weighted"]
+    print(f"[bench] objectives: time-opt split "
+          f"{w['time']['best_config']['host_fraction']} vs energy-opt "
+          f"{w['energy']['best_config']['host_fraction']} vs weighted "
+          f"{w['weighted']['best_config']['host_fraction']} "
+          f"(between: {w['weighted_between']})")
+
+    blob = json.dumps(results, indent=2) + "\n"
+    Path(args.out).write_text(blob)
+    if args.json:
+        print(blob)
     print(f"[bench] wrote {args.out}")
 
 

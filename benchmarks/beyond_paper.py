@@ -22,7 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import Autotuner, ConfigSpace, Param
+from repro.core import ConfigSpace, Param
+from repro.tune import TuningSession
 from repro.core.sharding_tuner import ShardingTuner
 from repro.kernels.dna_automaton import ops as dna_ops
 from repro.kernels.dna_automaton.ref import fa_match_ref
@@ -58,10 +59,9 @@ def real_dna_autotune(n_bytes: int = 2_000_000, budget: int = 18):
             fn = jax.jit(lambda t: fa_match_ref(t, table_j, accept_j)[0])
         return _timed(fn, text, reps=1)
 
-    tuner = Autotuner(space, run_cfg)
-    em = tuner.tune_em()
-    tuner2 = Autotuner(space, run_cfg)
-    sam = tuner2.tune_sam(iterations=budget, seed=0)
+    em = TuningSession(space, evaluator=run_cfg).run("em")
+    sam = TuningSession(space, evaluator=run_cfg).run(
+        "sam", iterations=budget, seed=0)
     rows = [{"method": "EM", "best_s": round(em.best_energy_measured, 4),
              "config": str(em.best_config),
              "experiments": em.n_experiments},
@@ -87,10 +87,10 @@ def sharding_tuner_bench(arch: str = "qwen2-moe-a2.7b",
         "dominant": base["dominant"],
     }, {
         "config": str(res.best_config),
-        "bound_s": round(res.best_energy, 4),
+        "bound_s": round(res.best_energy_measured, 4),
         "dominant": "-",
     }]
-    gain = base["step_time_bound_s"] / max(res.best_energy, 1e-12)
+    gain = base["step_time_bound_s"] / max(res.best_energy_measured, 1e-12)
     derived = (f"{arch} x {cell_name}: tuned/default = "
                f"{gain:.2f}x bound improvement, "
                f"{tuner.n_measurements} analytic measurements")

@@ -10,8 +10,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (Autotuner, DATASETS_GB, EmilPlatformModel,
+from repro.core import (DATASETS_GB, EmilPlatformModel,
                         fit_emil_surrogates, paper_space, percent_error)
+from repro.tune import TuningSession
 
 CHECKPOINTS = (250, 500, 750, 1000, 1250, 1500, 1750, 2000)
 
@@ -82,12 +83,12 @@ def tables_4_5_prediction_accuracy(platform: EmilPlatformModel):
     return rows, derived
 
 
-def _tuner_for(platform, dataset_gb, sur, n_train, step=3):
+def _session_for(platform, dataset_gb, sur, n_train, step=3):
     space = paper_space(workload_step=step)
     rng = np.random.default_rng(0)
-    return Autotuner(
+    return TuningSession(
         space,
-        measure=lambda c: platform.energy(c, dataset_gb, rng),
+        evaluator=lambda c: platform.energy(c, dataset_gb, rng),
         truth=lambda c: platform.energy(c, dataset_gb, None),
         surrogate=sur, n_training_experiments=n_train)
 
@@ -100,9 +101,9 @@ def tables_6_7_saml_vs_em(platform: EmilPlatformModel):
     for name, gb in DATASETS_GB.items():
         sur, n_train = fit_emil_surrogates(
             platform, gb, datasets_gb=list(DATASETS_GB.values()), seed=0)
-        tuner = _tuner_for(platform, gb, sur, n_train)
-        em = tuner.tune_em()
-        saml = tuner.tune_saml(iterations=2000, seed=7,
+        tuner = _session_for(platform, gb, sur, n_train)
+        em = tuner.run("em")
+        saml = tuner.run("saml", iterations=2000, seed=7,
                                checkpoints=CHECKPOINTS)
         for it in CHECKPOINTS:
             e, _ = saml.checkpoints[it]
@@ -127,9 +128,9 @@ def tables_8_9_speedup(platform: EmilPlatformModel):
     for name, gb in DATASETS_GB.items():
         sur, n_train = fit_emil_surrogates(
             platform, gb, datasets_gb=list(DATASETS_GB.values()), seed=0)
-        tuner = _tuner_for(platform, gb, sur, n_train)
-        em = tuner.tune_em()
-        saml = tuner.tune_saml(iterations=2000, seed=11,
+        tuner = _session_for(platform, gb, sur, n_train)
+        em = tuner.run("em")
+        saml = tuner.run("saml", iterations=2000, seed=11,
                                checkpoints=CHECKPOINTS)
         t_host = platform.host_only_time(gb)
         t_dev = platform.device_only_time(gb)
@@ -157,11 +158,11 @@ def table_2_strategy_costs(platform: EmilPlatformModel):
     gb = DATASETS_GB["cat"]
     sur, n_train = fit_emil_surrogates(
         platform, gb, datasets_gb=list(DATASETS_GB.values()), seed=0)
-    tuner = _tuner_for(platform, gb, sur, n_train, step=5)
-    em = tuner.tune_em()
-    eml = tuner.tune_eml()
-    sam = tuner.tune_sam(iterations=1000, seed=0)
-    saml = tuner.tune_saml(iterations=1000, seed=0)
+    tuner = _session_for(platform, gb, sur, n_train, step=5)
+    em = tuner.run("em")
+    eml = tuner.run("eml")
+    sam = tuner.run("sam", iterations=1000, seed=0)
+    saml = tuner.run("saml", iterations=1000, seed=0)
     rows = []
     for rep in (em, eml, sam, saml):
         rows.append({

@@ -22,21 +22,23 @@ import numpy as np
 
 
 def simulated() -> None:
-    from repro.core import (Autotuner, DATASETS_GB, EmilPlatformModel,
+    from repro.core import (DATASETS_GB, EmilPlatformModel,
                             fit_emil_surrogates, paper_space)
+    from repro.tune import TuningSession
     platform = EmilPlatformModel()
     print("=== SAML vs EM on the calibrated Emil simulator ===")
     for name, gb in DATASETS_GB.items():
         sur, n_train = fit_emil_surrogates(
             platform, gb, datasets_gb=list(DATASETS_GB.values()), seed=0)
         rng = np.random.default_rng(0)
-        tuner = Autotuner(paper_space(workload_step=3),
-                          measure=lambda c: platform.energy(c, gb, rng),
-                          truth=lambda c: platform.energy(c, gb, None),
-                          surrogate=sur, n_training_experiments=n_train)
-        em = tuner.tune_em()
-        saml = tuner.tune_saml(iterations=2000, seed=7,
-                               checkpoints=(250, 500, 1000, 2000))
+        session = TuningSession(
+            paper_space(workload_step=3),
+            evaluator=lambda c: platform.energy(c, gb, rng),
+            truth=lambda c: platform.energy(c, gb, None),
+            surrogate=sur, n_training_experiments=n_train)
+        em = session.run("em")
+        saml = session.run("saml", iterations=2000, seed=7,
+                           checkpoints=(250, 500, 1000, 2000))
         print(f"\n{name} ({gb} GB): EM best {em.best_energy_measured:.3f}s "
               f"({em.n_experiments} experiments)")
         for it in (250, 500, 1000, 2000):
@@ -49,7 +51,8 @@ def simulated() -> None:
 def real() -> None:
     import jax
     import jax.numpy as jnp
-    from repro.core import Autotuner, ConfigSpace, Param
+    from repro.core import ConfigSpace, Param
+    from repro.tune import TuningSession
     from repro.kernels.dna_automaton import ops as dna_ops
     import time
 
@@ -72,8 +75,9 @@ def real() -> None:
         jax.block_until_ready(fn(text))
         return time.perf_counter() - t0
 
-    em = Autotuner(space, measure).tune_em()
-    sam = Autotuner(space, measure).tune_sam(iterations=5, seed=0)
+    em = TuningSession(space, evaluator=measure).run("em")
+    sam = TuningSession(space, evaluator=measure).run("sam",
+                                                      iterations=5, seed=0)
     print(f"EM  best {em.best_energy_measured*1e3:7.1f} ms  "
           f"chunk={em.best_config['chunk']}  "
           f"({em.n_experiments} measurements)")

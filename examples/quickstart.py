@@ -15,8 +15,9 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
-from repro.core import (Autotuner, DATASETS_GB, EmilPlatformModel,
+from repro.core import (DATASETS_GB, EmilPlatformModel,
                         fit_emil_surrogates, paper_space)
+from repro.tune import TuningSession, list_strategies
 
 
 def main() -> None:
@@ -32,14 +33,16 @@ def main() -> None:
 
     space = paper_space(workload_step=5)
     rng = np.random.default_rng(0)
-    tuner = Autotuner(space,
-                      measure=lambda c: platform.energy(c, gb, rng),
-                      truth=lambda c: platform.energy(c, gb, None),
-                      surrogate=surrogate,
-                      n_training_experiments=n_train)
+    session = TuningSession(
+        space,
+        evaluator=lambda c: platform.energy(c, gb, rng),
+        truth=lambda c: platform.energy(c, gb, None),
+        surrogate=surrogate,
+        n_training_experiments=n_train)
+    print(f"registered strategies: {', '.join(list_strategies())}")
 
-    saml = tuner.tune_saml(iterations=1000, seed=1, checkpoints=(1000,))
-    em = tuner.tune_em()
+    saml = session.run("saml", iterations=1000, seed=1, checkpoints=(1000,))
+    em = session.run("em")
 
     e_saml = saml.checkpoints[1000][0]
     e_em = em.best_energy_measured

@@ -6,9 +6,14 @@ Public surface:
   ConfigSpace/Param      — discrete parameter spaces (space.py)
   simulated_annealing    — the paper's SA (sa.py), + vectorized_sa
   BoostedTreesRegressor  — from-scratch BDTR (bdtr.py)
-  Autotuner              — EM / EML / SAM / SAML strategies (autotuner.py)
+  Autotuner              — deprecated shim over ``repro.tune`` (the
+                           EM / EML / SAM / SAML engines now live in the
+                           strategy registry; see docs/tune.md)
   EmilPlatformModel      — calibrated simulator of the paper's platform
+                           (time + energy metric columns)
   fit_emil_surrogates    — the paper's 7200-experiment training pipeline
+
+New code should tune through ``repro.tune.TuningSession``.
 """
 
 from .autotuner import (Autotuner, TuneReport, emil_training_grids,

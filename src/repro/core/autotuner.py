@@ -5,12 +5,21 @@
   SAM   simulated annealing + measurements (near-optimal, medium effort)
   SAML  simulated annealing + machine learning — the paper's headline method
 
-``Autotuner`` binds a config space to a measurement oracle, owns the
-surrogate-model lifecycle (training-data generation + BDTR fitting,
-Sec. III-B of the paper) and exposes one ``tune`` call per strategy.
-All effort (experiments vs predictions) is accounted in the returned
-``TuneReport`` so benchmarks can reproduce the paper's Result 3
-("~5 % of the experiments of EM").
+.. deprecated::
+    ``Autotuner`` is a thin compatibility shim over the unified facade
+    in :mod:`repro.tune` (see ``docs/tune.md``).  The search engines now
+    live in the strategy registry (``repro.tune.strategy``) and every
+    ``tune_*`` method routes through a ``TuningSession``, emitting a
+    ``DeprecationWarning`` — results are bit-identical to the seed
+    engines on a fixed seed.  New code should build sessions directly:
+
+        from repro.tune import TuningSession
+        TuningSession(space, evaluator=measure, surrogate=pair).run(
+            "saml", iterations=1000, engine="vectorized")
+
+The surrogate-training pipeline (``emil_training_grids`` /
+``fit_emil_surrogates``, Sec. III-B of the paper) still lives here and
+is not deprecated.
 
 Every strategy takes an ``engine=`` knob selecting the execution path.
 With deterministic oracles the enumeration engines (EM/EML) return
@@ -26,9 +35,8 @@ its PRNG stream differs from the scalar chain's):
     when available.  A noisy oracle draws noise in a different order per
     engine, so seeded noisy results can differ.
   * ``tune_eml(engine=...)``   — ``"scalar"`` is the seed per-config
-    loop; ``"batched"`` (default) materializes the space once
-    (``ConfigSpace.enumerate_columns``) and scores it with two ensemble
-    ``predict`` calls via ``BatchedLearnedEvaluator``.
+    loop; ``"batched"`` (default) materializes the space once and scores
+    it with two ensemble ``predict`` calls.
   * ``tune_saml(engine=...)``  — ``"scalar"`` (default) is the paper's
     single chain; ``"vectorized"`` runs multi-chain jitted SA
     (``sa.vectorized_sa``) over the packed BDTR pair with the
@@ -37,43 +45,23 @@ its PRNG stream differs from the scalar chain's):
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import warnings
 from typing import Any, Callable, Mapping, Sequence
 
 import numpy as np
 
+from ..tune.result import TuneResult
 from .bdtr import BoostedTreesRegressor
-from .evaluators import (BatchedLearnedEvaluator, LearnedEvaluator,
-                         MeasurementEvaluator, SurrogatePair)
+from .evaluators import SurrogatePair
 from .platform_model import EmilPlatformModel
-from .sa import SASchedule, simulated_annealing, vectorized_sa
 from .space import ConfigSpace
 
 __all__ = ["Autotuner", "TuneReport", "emil_training_grids",
            "fit_emil_surrogates"]
 
-
-@dataclass
-class TuneReport:
-    strategy: str
-    best_config: dict
-    best_energy_search: float      # energy the search itself saw (pred or meas)
-    best_energy_measured: float    # ground-truth (noise-free) energy
-    n_experiments: int             # measurements performed during the search
-    n_predictions: int             # surrogate queries during the search
-    n_training_experiments: int    # one-time surrogate training measurements
-    space_size: int
-    # {iteration: (measured energy of best-so-far config, config)}
-    checkpoints: dict[int, tuple[float, dict]] = field(default_factory=dict)
-    # True when the report was served from a persistent tuning cache
-    # (repro.runtime.store) — the counters above then describe the effort
-    # of the *original* recorded search, and this tune ran 0 experiments.
-    from_cache: bool = False
-
-    @property
-    def experiments_fraction(self) -> float:
-        """Search experiments as a fraction of the enumeration count."""
-        return self.n_experiments / max(self.space_size, 1)
+# The unified result record superseded the seed's report; the name (and
+# the persisted-cache schema) stay importable from here.
+TuneReport = TuneResult
 
 
 class Autotuner:
@@ -128,94 +116,44 @@ class Autotuner:
         from ..runtime.store import TuningStore
         return TuningStore(store)
 
-    # -- strategies --------------------------------------------------------
+    # -- the deprecated shim over repro.tune --------------------------------
+    def _session(self):
+        from ..tune import TuningSession
+        return TuningSession(
+            self.space, evaluator=self.measure,
+            evaluator_batch=self.measure_batch, surrogate=self.surrogate,
+            truth=self.truth,
+            n_training_experiments=self.n_training_experiments)
+
+    def _run(self, name: str, strategy: str, **opts) -> TuneReport:
+        warnings.warn(
+            f"Autotuner.{name} is deprecated; use "
+            f"repro.tune.TuningSession(...).run({strategy!r}) instead "
+            "(see docs/tune.md)",
+            DeprecationWarning, stacklevel=3)
+        if strategy in ("eml", "saml") and self.surrogate is None:
+            raise ValueError("strategy needs a trained surrogate "
+                             "(pass surrogate= to Autotuner)")
+        return self._session().run(strategy, **opts)
+
+    # -- strategies (legacy surface; identical seeded results) --------------
     def tune_em(self, *, engine: str = "auto") -> TuneReport:
-        if engine == "auto":
-            engine = "batched" if self.measure_batch is not None else "scalar"
-        if engine == "batched":
-            if self.measure_batch is None:
-                raise ValueError("batched EM needs measure_batch= on the "
-                                 "Autotuner")
-            grid = self.space.index_grid()
-            energies = np.asarray(
-                self.measure_batch(self.space.enumerate_columns(grid)))
-            k = int(np.argmin(energies))      # first minimum, like the loop
-            best_cfg = self.space.from_indices(grid[k])
-            # enumeration visits each distinct config exactly once, so the
-            # deduplicated experiment count equals the space size
-            return self._report("EM", best_cfg, float(energies[k]),
-                                self.space.size(), 0)
-        if engine != "scalar":
-            raise ValueError(f"unknown EM engine {engine!r}")
-        ev = MeasurementEvaluator(self.measure, self.space)
-        best_cfg, best_e = None, float("inf")
-        for cfg in self.space.enumerate():
-            e = ev(cfg)
-            if e < best_e:
-                best_cfg, best_e = cfg, e
-        return self._report("EM", best_cfg, best_e, ev.n_experiments, 0)
+        return self._run("tune_em", "em", engine=engine)
 
     def tune_eml(self, *, engine: str = "batched") -> TuneReport:
-        surrogate = self._require_surrogate()
-        if engine == "batched":
-            ev = BatchedLearnedEvaluator(surrogate)
-            grid = self.space.index_grid()
-            energies = np.asarray(ev(self.space.enumerate_columns(grid)))
-            k = int(np.argmin(energies))      # first minimum, like the loop
-            best_cfg = self.space.from_indices(grid[k])
-            return self._report("EML", best_cfg, float(energies[k]),
-                                0, ev.n_predictions)
-        if engine != "scalar":
-            raise ValueError(f"unknown EML engine {engine!r}")
-        ev = LearnedEvaluator(surrogate)
-        best_cfg, best_e = None, float("inf")
-        for cfg in self.space.enumerate():
-            e = ev(cfg)
-            if e < best_e:
-                best_cfg, best_e = cfg, e
-        return self._report("EML", best_cfg, best_e, 0, ev.n_predictions)
+        return self._run("tune_eml", "eml", engine=engine)
 
     def tune_sam(self, *, iterations: int = 1000, seed: int = 0,
                  checkpoints: Sequence[int] = ()) -> TuneReport:
-        ev = MeasurementEvaluator(self.measure, self.space)
-        res = simulated_annealing(
-            self.space, ev, seed=seed,
-            schedule=SASchedule.for_iterations(iterations),
-            max_iterations=iterations, checkpoint_at=checkpoints,
-        )
-        return self._report("SAM", res.best_config, res.best_energy,
-                            ev.n_experiments, 0, res.checkpoints)
+        return self._run("tune_sam", "sam", iterations=iterations, seed=seed,
+                         checkpoints=checkpoints)
 
     def tune_saml(self, *, iterations: int = 1000, seed: int = 0,
                   checkpoints: Sequence[int] = (), engine: str = "scalar",
                   n_chains: int = 32) -> TuneReport:
-        surrogate = self._require_surrogate()
-        if engine == "vectorized":
-            if surrogate.energy_fn_jax_builder is None:
-                raise ValueError(
-                    "vectorized SAML needs a surrogate with an "
-                    "energy_fn_jax_builder (see fit_emil_surrogates)")
-            energy_fn = surrogate.energy_fn_jax_builder(self.space)
-            res = vectorized_sa(
-                self.space, energy_fn, n_chains=n_chains,
-                n_iterations=iterations,
-                schedule=SASchedule.for_iterations(iterations),
-                seed=seed, checkpoint_at=checkpoints,
-            )
-            # every chain step is one surrogate query — same accounting
-            # unit as the scalar engine (predictions, not experiments)
-            return self._report("SAML", res.best_config, res.best_energy,
-                                0, res.n_evaluations, res.checkpoints)
-        if engine != "scalar":
-            raise ValueError(f"unknown SAML engine {engine!r}")
-        ev = LearnedEvaluator(surrogate)
-        res = simulated_annealing(
-            self.space, ev, seed=seed,
-            schedule=SASchedule.for_iterations(iterations),
-            max_iterations=iterations, checkpoint_at=checkpoints,
-        )
-        return self._report("SAML", res.best_config, res.best_energy,
-                            0, ev.n_predictions, res.checkpoints)
+        return self._run("tune_saml", "saml", iterations=iterations,
+                         seed=seed, checkpoints=checkpoints, engine=engine,
+                         n_chains=n_chains)
 
     def tune(self, strategy: str, **kw) -> TuneReport:
         strategy = strategy.upper()
@@ -233,36 +171,6 @@ class Autotuner:
         if self.record_to is not None:
             self.record_to.record(self.space, self.workload, strategy, report)
         return report
-
-    # -- helpers -----------------------------------------------------------
-    def _require_surrogate(self) -> SurrogatePair:
-        if self.surrogate is None:
-            raise ValueError("strategy needs a trained surrogate "
-                             "(pass surrogate= to Autotuner)")
-        return self.surrogate
-
-    def _report(self, strategy: str, cfg: dict, search_e: float,
-                n_exp: int, n_pred: int,
-                checkpoints: Mapping[int, tuple[float, dict]] | None = None,
-                ) -> TuneReport:
-        # For fair comparison the paper evaluates suggested configs with
-        # *measured* values (Sec. IV-C) — re-measure checkpoints with truth.
-        measured_cp = {
-            it: (float(self.truth(c)), dict(c))
-            for it, (_, c) in (checkpoints or {}).items()
-        }
-        return TuneReport(
-            strategy=strategy,
-            best_config=dict(cfg),
-            best_energy_search=float(search_e),
-            best_energy_measured=float(self.truth(cfg)),
-            n_experiments=n_exp,
-            n_predictions=n_pred,
-            n_training_experiments=(self.n_training_experiments
-                                    if strategy in ("EML", "SAML") else 0),
-            space_size=self.space.size(),
-            checkpoints=measured_cp,
-        )
 
 
 # ---------------------------------------------------------------------------

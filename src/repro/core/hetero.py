@@ -130,29 +130,56 @@ class HeterogeneousRunner:
                   for g in (self.group_a, self.group_b)]
         return {"batch": shapes, "groups": groups}
 
-    def tune_fraction_sa(self, batch: dict, *, iterations: int = 30,
-                         seed: int = 0, store=None) -> float:
-        """SAM over {fraction}: simulated annealing with measured energy.
+    def tuning_session(self, batch: dict, *, store=None, **session_kw):
+        """A ``repro.tune.TuningSession`` over this runner's fraction space.
 
-        ``store`` (a ``repro.runtime.store.TuningStore`` or a path)
-        short-circuits repeated tuning: a hit on this workload's
-        signature returns the recorded best fraction with zero new
-        measurements, and a miss records the search result for next time.
+        The evaluator dispatches the batch at the candidate fraction and
+        returns the measured step metrics (``time`` = max(T_a, T_b), the
+        per-group times under ``t_host``/``t_device`` so an ``online=``
+        surrogate loop can consume them).  ``store`` (a
+        ``repro.runtime.store.TuningStore`` or a path) caches results
+        under this workload's signature.
         """
-        from .autotuner import Autotuner
+        from ..tune import TuningSession
         from .space import ConfigSpace, Param
 
-        space = ConfigSpace([Param("fraction",
-                                   tuple(range(5, 100, 5)))])
+        space = ConfigSpace([Param("fraction", tuple(range(5, 100, 5)))])
 
         def measure(cfg):
             self.fraction = cfg["fraction"] / 100.0
             rec = self.step(batch, rebalance=False)
-            return rec["t_step"]
+            return {"time": rec["t_step"], "t_host": rec["t_a"],
+                    "t_device": rec["t_b"]}
 
-        tuner = Autotuner(space, measure, warm_start=store, record_to=store,
-                          workload=self.workload(batch) if store is not None
-                          else None)
-        report = tuner.tune("SAM", iterations=iterations, seed=seed)
-        self.fraction = report.best_config["fraction"] / 100.0
+        return TuningSession(
+            space, evaluator=measure, store=store,
+            workload=self.workload(batch) if store is not None else None,
+            **session_kw)
+
+    def tune_fraction(self, batch: dict, *, strategy: str = "sam",
+                      iterations: int = 30, seed: int = 0, store=None,
+                      **session_kw) -> float:
+        """Tune the work fraction with any registered strategy (default:
+        the paper's SAM — simulated annealing with measured step times)
+        and apply the winner."""
+        session = self.tuning_session(batch, store=store, **session_kw)
+        result = session.run(strategy, iterations=iterations, seed=seed)
+        self.fraction = result.best_config["fraction"] / 100.0
         return self.fraction
+
+    def tune_fraction_sa(self, batch: dict, *, iterations: int = 30,
+                         seed: int = 0, store=None) -> float:
+        """Deprecated alias of ``tune_fraction(strategy="sam")``.
+
+        .. deprecated:: use :meth:`tune_fraction` (or build a
+           :meth:`tuning_session` directly) — same seeded search, same
+           cache behaviour.
+        """
+        import warnings
+        warnings.warn(
+            "HeterogeneousRunner.tune_fraction_sa is deprecated; use "
+            "tune_fraction(strategy='sam') / tuning_session(...) "
+            "(see docs/tune.md)", DeprecationWarning, stacklevel=2)
+        return self.tune_fraction(batch, strategy="sam",
+                                  iterations=iterations, seed=seed,
+                                  store=store)

@@ -26,13 +26,19 @@ asserts these bands.
 
 The model evaluates E = max(T_host, T_device) (paper Eq. 2) — host and
 device shares run concurrently under the offload-overlap execution model.
+
+Beyond the paper, the model also carries an **energy column** (joules):
+each side draws base + per-thread watts while its share runs (the Phi is
+the power-hungry side), enabling the energy-aware objectives of
+``repro.tune`` (``metrics`` / ``metrics_batch`` / ``evaluator`` return
+``{"time", "energy", "t_host", "t_device"}`` records).
 """
 
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Mapping
+from typing import Any, Mapping
 
 import numpy as np
 
@@ -71,6 +77,15 @@ class EmilPlatformModel:
     device_affinity_mult: Mapping[str, float] | None = None
     # Measurement noise (lognormal sigma); 0 disables.
     noise_sigma: float = 0.015
+    # Power draw (watts) for the energy-to-solution column: each side
+    # consumes base + per-thread power while its share runs.  Defaults
+    # approximate the platform's TDPs (2x Xeon E5-2695v2 ~230 W total at
+    # 48 threads; Xeon Phi 7120P ~300 W at 240 threads) — the Phi is the
+    # power-hungry side, so time- and energy-optimal splits differ.
+    host_base_w: float = 80.0
+    host_thread_w: float = 3.2
+    device_base_w: float = 110.0
+    device_thread_w: float = 0.85
 
     _DEFAULT_HOST_AFF = {"none": 1.00, "scatter": 0.98, "compact": 1.10}
     _DEFAULT_DEVICE_AFF = {"balanced": 0.96, "scatter": 1.00, "compact": 1.12}
@@ -210,6 +225,74 @@ class EmilPlatformModel:
         """E = max(T_host, T_device)   (paper Eq. 2)."""
         th, td = self.measure(config, dataset_gb, rng)
         return max(th, td)
+
+    # -- the energy column (joules) and multi-metric oracles ---------------------
+    def _power_w(self, host_threads: Any, device_threads: Any
+                 ) -> tuple[Any, Any]:
+        """Per-side power draw (watts) while that side's share runs."""
+        ph = self.host_base_w + self.host_thread_w * host_threads
+        pd = self.device_base_w + self.device_thread_w * device_threads
+        return ph, pd
+
+    def joules(self, config: Mapping, dataset_gb: float,
+               rng: np.random.Generator | None = None) -> float:
+        """Energy-to-solution: sum of per-side time x power draws."""
+        return self.metrics(config, dataset_gb, rng)["energy"]
+
+    def metrics(self, config: Mapping, dataset_gb: float,
+                rng: np.random.Generator | None = None) -> dict[str, float]:
+        """One measurement as a metrics record.
+
+        Returns ``{"time", "energy", "t_host", "t_device"}`` — the
+        paper's E = max(T_host, T_device) under ``"time"`` and the
+        energy-to-solution column (joules) under ``"energy"``, from a
+        single pair of (possibly noisy) per-side measurements.
+        """
+        th, td = self.measure(config, dataset_gb, rng)
+        ph, pd = self._power_w(float(config["host_threads"]),
+                               float(config["device_threads"]))
+        return {"time": max(th, td), "energy": th * ph + td * pd,
+                "t_host": th, "t_device": td}
+
+    def metrics_batch(self, columns: Mapping[str, np.ndarray],
+                      dataset_gb: float,
+                      rng: np.random.Generator | None = None
+                      ) -> dict[str, np.ndarray]:
+        """Vectorized ``metrics`` over a column-oriented config batch.
+
+        Noise draws consume ``rng`` in the same order as ``energy_batch``
+        (one host vector, then one device vector), so seeded scores on
+        the ``"time"`` column match the time-only batched oracle.
+        """
+        f = np.asarray(columns["host_fraction"], dtype=np.float64) / 100.0
+        ht = np.asarray(columns["host_threads"], dtype=np.float64)
+        dt = np.asarray(columns["device_threads"], dtype=np.float64)
+        th = self.host_time_batch(dataset_gb * f, ht,
+                                  np.asarray(columns["host_affinity"]))
+        td = self.device_time_batch(dataset_gb * (1.0 - f), dt,
+                                    np.asarray(columns["device_affinity"]))
+        if rng is not None and self.noise_sigma > 0:
+            th = th * np.where(th > 0,
+                               np.exp(rng.normal(0.0, self.noise_sigma,
+                                                 th.shape)), 1.0)
+            td = td * np.where(td > 0,
+                               np.exp(rng.normal(0.0, self.noise_sigma,
+                                                 td.shape)), 1.0)
+        ph, pd = self._power_w(ht, dt)
+        return {"time": np.maximum(th, td), "energy": th * ph + td * pd,
+                "t_host": th, "t_device": td}
+
+    def evaluator(self, dataset_gb: float,
+                  rng: np.random.Generator | None = None):
+        """Both oracle paths bundled for ``repro.tune.TuningSession``.
+
+        Returns a ``MetricsEvaluator`` whose scalar and batch paths share
+        ``rng`` (pass ``None`` for noise-free ground truth).
+        """
+        from ..tune.objective import MetricsEvaluator
+        return MetricsEvaluator(
+            lambda cfg: self.metrics(cfg, dataset_gb, rng),
+            lambda cols: self.metrics_batch(cols, dataset_gb, rng))
 
     # -- reference points used by the paper's speedup tables ---------------------
     def host_only_time(self, dataset_gb: float, threads: int = 48,

@@ -31,8 +31,8 @@ from ..launch.mesh import make_production_mesh, set_mesh
 from ..models.config import ArchConfig
 from ..roofline import analysis
 from ..roofline.hlo import collective_census
+from ..tune import TuneResult, TuningSession
 from .bdtr import BoostedTreesRegressor
-from .sa import SASchedule, simulated_annealing
 from .space import ConfigSpace, Param
 
 __all__ = ["ShardingTuner", "sharding_space", "evaluate_config"]
@@ -175,16 +175,33 @@ class ShardingTuner:
         self.history.append(rec)
         return e
 
-    def tune_sam(self, iterations: int = 60, seed: int = 0):
-        res = simulated_annealing(
-            self.space, self._energy, seed=seed,
-            schedule=SASchedule.for_iterations(iterations),
-            max_iterations=iterations)
-        return res
+    def session(self, *, store=None, surrogate=None,
+                **session_kw) -> TuningSession:
+        """A ``repro.tune.TuningSession`` over this cell's config space.
 
-    def tune_saml(self, *, train_samples: int = 40, iterations: int = 2000,
-                  seed: int = 0):
-        """Paper's SAML: sample+measure, fit BDTR, SA on the surrogate."""
+        The evaluator is the roofline measurement (``self._energy``,
+        internally cached + validity-penalised); ``surrogate`` may be a
+        plain ``point -> predicted bound`` callable (see
+        :meth:`fit_surrogate`).  ``store`` caches results under the
+        (arch, cell, mode) workload signature.
+        """
+        return TuningSession(
+            self.space, evaluator=self._energy, surrogate=surrogate,
+            store=store, workload=self._workload() if store is not None
+            else None, **session_kw)
+
+    def _workload(self) -> dict:
+        return {"arch": self.arch_cfg.name, "cell": self.cell.name,
+                "mode": self.mode}
+
+    def fit_surrogate(self, *, train_samples: int = 40, seed: int = 0):
+        """Sample+measure valid points and fit the BDTR surrogate.
+
+        Returns a plain ``point -> predicted bound`` callable (invalid
+        points score 1e9, as in the measurement path) usable as the
+        ``surrogate=`` of a session — the sharding analogue of the
+        paper's one-time training grid.
+        """
         rng = np.random.default_rng(seed)
         X, y = [], []
         while len(y) < train_samples:
@@ -203,13 +220,25 @@ class ShardingTuner:
                 return 1e9
             return float(model.predict(self._encode(point)[None, :])[0])
 
-        res = simulated_annealing(
-            self.space, predicted, seed=seed,
-            schedule=SASchedule.for_iterations(iterations),
-            max_iterations=iterations)
-        # measure the suggested configuration once (paper's final check)
-        res.best_energy = self._energy(res.best_config)
-        return res
+        return predicted
+
+    def tune_sam(self, iterations: int = 60, seed: int = 0) -> TuneResult:
+        """The paper's SAM over the distribution space (roofline energy)."""
+        return self.session().run("sam", iterations=iterations, seed=seed)
+
+    def tune_saml(self, *, train_samples: int = 40, iterations: int = 2000,
+                  seed: int = 0) -> TuneResult:
+        """Paper's SAML: sample+measure, fit BDTR, SA on the surrogate.
+
+        The search runs on the fitted surrogate; the suggested
+        configuration is then measured once (the session's ground-truth
+        re-scoring — the paper's final check)."""
+        surrogate = self.fit_surrogate(train_samples=train_samples,
+                                       seed=seed)
+        # the session's ground-truth re-scoring measures the suggested
+        # config once through self._energy (the evaluator fallback)
+        return self.session(surrogate=surrogate).run(
+            "saml", iterations=iterations, seed=seed)
 
     def _encode(self, point: dict) -> np.ndarray:
         feats = []

@@ -88,31 +88,9 @@ def serve_session(cfg, *, batch: int, prompt_len: int, gen: int,
     }
 
 
-def serve_stream(cfg, *, groups: list[DeviceGroup], n_batches: int = 4,
-                 batch: int = 8, prompt_len: int = 16, gen: int = 8,
-                 seed: int = 0, chunks_per_group: int = 2,
-                 row_quantum: int = 2, controller=None) -> dict:
-    """Adaptive serving: chunk-schedule request batches across groups.
-
-    Each group holds its own (replicated) copy of the params and runs
-    full prefill+decode for the request rows it is handed; the
-    ``StreamingPipeline``'s EWMA controller moves rows between groups as
-    measured per-chunk times come in, so the split tracks the live
-    request mix and relative group speed.  Decoder-only models.
-    ``row_quantum`` coarsens chunk sizes (prefill/decode re-jit per
-    distinct chunk shape, so coarse quanta keep the compiled-shape set
-    small while the split drifts).
-    """
-    from ..runtime import StreamingPipeline
-
-    if cfg.encdec:
-        raise ValueError("serve_stream supports decoder-only models")
-    n_devices = sum(len(g.devices) for g in groups)
-    if batch < n_devices:
-        raise ValueError(
-            f"--batch {batch} is smaller than one request per device "
-            f"({n_devices}); raise --batch or use fewer devices/groups")
-    model = build_model(cfg)
+def _stream_step_builder(model, *, prompt_len: int, gen: int, seed: int):
+    """Per-group prefill+decode step factory shared by ``serve_stream``
+    and the split tuner (same jitted functions, same chunk contract)."""
     max_len = prompt_len + gen
 
     def step_builder(group: DeviceGroup):
@@ -140,10 +118,115 @@ def serve_stream(cfg, *, groups: list[DeviceGroup], n_batches: int = 4,
                 return jnp.concatenate(outs, axis=1)
         return fn
 
-    pipeline = StreamingPipeline(step_builder, groups,
-                                 chunks_per_group=chunks_per_group,
-                                 row_quantum=row_quantum,
-                                 controller=controller)
+    return step_builder
+
+
+def _memoize_per_group(step_builder):
+    """Cache the per-group step closures (params init + jitted
+    prefill/decode) so a builder shared between ``tune_stream_split``
+    and ``serve_stream`` compiles each group's functions exactly once."""
+    cache: dict[int, object] = {}
+
+    def memoized(group: DeviceGroup):
+        key = id(group)
+        if key not in cache:
+            cache[key] = step_builder(group)
+        return cache[key]
+    return memoized
+
+
+def tune_stream_split(cfg, *, groups: list[DeviceGroup], batch: int = 8,
+                      prompt_len: int = 16, gen: int = 8, seed: int = 0,
+                      strategy: str = "sam", iterations: int = 10,
+                      store=None, chunks_per_group: int = 2,
+                      row_quantum: int = 2, model=None, step_builder=None):
+    """Offline-tune the initial two-group split through ``repro.tune``.
+
+    The paper's loop at serve time: the config space is the fraction of
+    each request batch handed to the first group, one measurement is a
+    chunk-scheduled dispatch (rebalance off) of a representative batch,
+    and any registered strategy searches it.  ``store`` caches the tuned
+    split per (batch shape x group topology) workload signature, so a
+    serving session on a known workload starts at the tuned split with
+    zero extra measurements.  Returns shares for the controller.
+    """
+    from ..core.space import ConfigSpace, Param
+    from ..runtime import ChunkedScheduler, EwmaController
+    from ..tune import TuningSession
+
+    if len(groups) != 2:
+        raise ValueError("tune_stream_split needs exactly two device groups")
+    if step_builder is None:
+        model = model if model is not None else build_model(cfg)
+        step_builder = _stream_step_builder(model, prompt_len=prompt_len,
+                                            gen=gen, seed=seed)
+    rng = np.random.default_rng(seed)
+    sample = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)}
+    controller = EwmaController(2)
+    sched = ChunkedScheduler(
+        step_builder, groups, controller=controller,
+        chunks_per_group=chunks_per_group, row_quantum=row_quantum)
+    space = ConfigSpace([Param("fraction", tuple(range(10, 100, 10)))])
+
+    def measure(cfg_point):
+        f = cfg_point["fraction"] / 100.0
+        controller.shares = np.asarray([f, 1.0 - f])
+        rec = sched.step(sample, rebalance=False)
+        return {"time": rec["t_step"], "t_host": rec["t_group"][0],
+                "t_device": rec["t_group"][1]}
+
+    workload = None
+    if store is not None:
+        workload = {"batch": (batch, prompt_len, gen), "arch": cfg.name,
+                    "groups": [(g.name, len(g.devices), g.work_multiplier)
+                               for g in groups]}
+    session = TuningSession(space, evaluator=measure, store=store,
+                            workload=workload)
+    result = session.run(strategy, iterations=iterations, seed=seed)
+    f = result.best_config["fraction"] / 100.0
+    return np.asarray([f, 1.0 - f]), result
+
+
+def serve_stream(cfg, *, groups: list[DeviceGroup], n_batches: int = 4,
+                 batch: int = 8, prompt_len: int = 16, gen: int = 8,
+                 seed: int = 0, chunks_per_group: int = 2,
+                 row_quantum: int = 2, controller=None,
+                 initial_shares=None, model=None,
+                 step_builder=None) -> dict:
+    """Adaptive serving: chunk-schedule request batches across groups.
+
+    Each group holds its own (replicated) copy of the params and runs
+    full prefill+decode for the request rows it is handed; the
+    ``StreamingPipeline``'s EWMA controller moves rows between groups as
+    measured per-chunk times come in, so the split tracks the live
+    request mix and relative group speed.  Decoder-only models.
+    ``row_quantum`` coarsens chunk sizes (prefill/decode re-jit per
+    distinct chunk shape, so coarse quanta keep the compiled-shape set
+    small while the split drifts).  ``initial_shares`` (e.g. from
+    ``tune_stream_split``) starts the controller at a tuned split
+    instead of uniform.
+    """
+    from ..runtime import EwmaController, StreamingPipeline
+
+    if cfg.encdec:
+        raise ValueError("serve_stream supports decoder-only models")
+    n_devices = sum(len(g.devices) for g in groups)
+    if batch < n_devices:
+        raise ValueError(
+            f"--batch {batch} is smaller than one request per device "
+            f"({n_devices}); raise --batch or use fewer devices/groups")
+    if step_builder is None:
+        model = model if model is not None else build_model(cfg)
+        step_builder = _stream_step_builder(model, prompt_len=prompt_len,
+                                            gen=gen, seed=seed)
+    if controller is None and initial_shares is not None:
+        controller = EwmaController(len(groups),
+                                    shares=np.asarray(initial_shares))
+
+    pipeline = StreamingPipeline(
+        step_builder, groups, chunks_per_group=chunks_per_group,
+        row_quantum=row_quantum, controller=controller)
     rng = np.random.default_rng(seed)
     batches = [{"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)}
@@ -166,6 +249,15 @@ def main() -> None:
     ap.add_argument("--stream-batches", type=int, default=4)
     ap.add_argument("--slow", type=int, default=0,
                     help="reserve the last N devices as a second group")
+    ap.add_argument("--tune-split", action="store_true",
+                    help="tune the initial two-group split offline "
+                    "(repro.tune session) before streaming")
+    ap.add_argument("--tune-store", default=None,
+                    help="TuningStore JSON path caching tuned splits "
+                    "per workload signature")
+    ap.add_argument("--tune-strategy", default="sam",
+                    help="registered strategy for --tune-split "
+                    "(see repro.tune.list_strategies())")
     args = ap.parse_args()
     cfg = configs.get(args.arch)
     if args.smoke:
@@ -179,9 +271,27 @@ def main() -> None:
                       DeviceGroup("slow", devs[-args.slow:])]
         else:
             groups = [DeviceGroup("all", devs)]
+        initial_shares = None
+        # one memoized builder: the split tuner and the serving pipeline
+        # share per-group params init + jitted prefill/decode
+        builder = _memoize_per_group(_stream_step_builder(
+            build_model(cfg), prompt_len=args.prompt_len, gen=args.gen,
+            seed=0))
+        if args.tune_split:
+            if len(groups) != 2:
+                ap.error("--tune-split needs two groups (pass --slow N)")
+            initial_shares, tuned = tune_stream_split(
+                cfg, groups=groups, batch=args.batch,
+                prompt_len=args.prompt_len, gen=args.gen,
+                strategy=args.tune_strategy, store=args.tune_store,
+                step_builder=builder)
+            print(f"tuned split: {initial_shares.round(2)} "
+                  f"({tuned.strategy}, {tuned.n_experiments} measurements"
+                  f"{', cached' if tuned.from_cache else ''})")
         out = serve_stream(cfg, groups=groups, n_batches=args.stream_batches,
                            batch=args.batch, prompt_len=args.prompt_len,
-                           gen=args.gen)
+                           gen=args.gen, initial_shares=initial_shares,
+                           step_builder=builder)
         s = out["summary"]
         print(f"stream: {s['batches']} batches  "
               f"{s['tokens_per_s_mean']:.1f} tok/s  "

@@ -20,8 +20,8 @@ closed at run time (usage guide: ``docs/runtime.md``):
 
 ``store`` — persistent tuning cache.
     :class:`~repro.runtime.store.TuningStore` keys recorded
-    ``TuneReport``s by workload signature (space hash + shapes + device
-    topology); ``Autotuner(warm_start=, record_to=)`` serves repeated
+    ``TuneResult``s by workload signature (space hash + shapes + device
+    topology); ``repro.tune.TuningSession(store=...)`` serves repeated
     workloads with zero new measurements.
 
 ``stream`` — streaming pipeline scenario.

@@ -16,13 +16,20 @@ degraded group).  ``OnlineSurrogateLoop`` closes the loop:
     every later batch of rows is a ``searchsorted`` against frozen edges
     (``bdtr.append_rows``).
 
-The refit mutates the pair's models **in place**, so an ``Autotuner``
-already holding the ``SurrogatePair`` picks up the refreshed surrogate
-on its next ``tune_saml``/``tune_eml`` call (both the scalar and the
-vectorized engines rebuild their prediction functions per call) —
-i.e. the search restarts from live data instead of the offline grid.
-Observations can be persisted/restored through a ``TuningStore`` NPZ
-side-car (``save_to``/``load_from``).
+The refit mutates the pair's models **in place**, so any search holding
+the ``SurrogatePair`` picks up the refreshed surrogate on its next
+``saml``/``eml`` run (both the scalar and the vectorized engines rebuild
+their prediction functions per call) — i.e. the search restarts from
+live data instead of the offline grid.  Observations can be
+persisted/restored through a ``TuningStore`` NPZ side-car
+(``save_to``/``load_from``).
+
+The unified facade integration (``repro.tune``): pass the loop as the
+``online=`` of a ``TuningSession`` — or call :meth:`session` — and the
+session (a) folds pending observations into the surrogate before every
+search and (b) feeds each measurement whose metrics carry per-side times
+(``t_host``/``t_device``) back into the loop, closing search -> measure
+-> refit -> search in one object graph.
 """
 
 from __future__ import annotations
@@ -151,6 +158,22 @@ class OnlineSurrogateLoop:
             self._since_refit = 0
             self.n_refits += 1
         return ran
+
+    # -- the unified tuning facade ------------------------------------------
+    def session(self, space, **session_kw):
+        """A ``repro.tune.TuningSession`` wired to this loop.
+
+        The session searches this loop's (live-refit) surrogate pair and
+        streams its measurements back in::
+
+            loop = OnlineSurrogateLoop(pair)
+            session = loop.session(paper_space(),
+                                   evaluator=platform.evaluator(gb))
+            session.run("sam", iterations=50)     # measures -> observes
+            session.run("saml", engine="vectorized")  # live-data restart
+        """
+        from ..tune import TuningSession
+        return TuningSession(space, online=self, **session_kw)
 
     # -- persistence (TuningStore NPZ side-car) -----------------------------
     def save_to(self, store, sig: str) -> None:

@@ -10,10 +10,13 @@ device topology.  A repeated workload is served from the cache with
 zero new measurements; any change to space, workload or topology
 changes the signature and forces a fresh search.
 
-``Autotuner`` consumes this through its ``warm_start=`` / ``record_to=``
-knobs (``core/autotuner.py``); the online feedback loop
-(``runtime/feedback.py``) persists its observation arrays next to the
-JSON via the NPZ side-car helpers.
+The unified facade consumes this through ``TuningSession(store=...)``
+(``repro.tune.session``; entries are keyed per strategy *and* objective)
+and the deprecated ``Autotuner`` through its ``warm_start=`` /
+``record_to=`` knobs; the online feedback loop (``runtime/feedback.py``)
+persists its observation arrays next to the JSON via the NPZ side-car
+helpers.  Records round-trip as ``TuneResult`` (``TuneReport`` is its
+legacy alias).
 """
 
 from __future__ import annotations
@@ -34,12 +37,20 @@ __all__ = ["TuningStore", "space_fingerprint", "workload_signature"]
 
 
 def _canon(obj: Any):
-    """Canonicalize a workload payload for hashing: tuples -> lists,
-    numpy scalars/arrays -> python, dict keys -> str, sorted."""
+    """Canonicalize a workload payload for hashing.
+
+    Semantically identical payloads must hash identically regardless of
+    how the caller spelled them: dict keys are stringified and sorted
+    (insertion order never matters), tuples and lists normalize to one
+    shape, sets/frozensets are ordered, numpy scalars/arrays become
+    plain Python.  Anything else falls back to ``repr``.
+    """
     if isinstance(obj, Mapping):
         return {str(k): _canon(obj[k]) for k in sorted(obj, key=str)}
     if isinstance(obj, (list, tuple)):
         return [_canon(v) for v in obj]
+    if isinstance(obj, (set, frozenset)):
+        return sorted((_canon(v) for v in obj), key=repr)
     if isinstance(obj, np.ndarray):
         return [_canon(v) for v in obj.tolist()]
     if isinstance(obj, (np.integer,)):

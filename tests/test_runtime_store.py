@@ -38,6 +38,44 @@ def test_signature_depends_on_space_workload_and_devices():
                                       devices=[["cpu", "", 4]])
 
 
+def test_signature_is_key_order_independent():
+    """A semantically identical workload dict must hash identically no
+    matter how the caller spelled it: permuted key order, tuple vs list
+    values, numpy vs python scalars, set ordering."""
+    s = small_space()
+    dev = [["cpu", "", 8]]
+    base = workload_signature(
+        s, {"batch": (8, 16), "arch": "qwen", "groups": [("a", 4), ("b", 4)],
+            "tags": {"x", "y"}}, devices=dev)
+    permuted = workload_signature(
+        s, {"tags": {"y", "x"}, "groups": [["a", 4], ["b", 4]],
+            "arch": "qwen", "batch": [8, 16]}, devices=dev)
+    assert base == permuted
+    numpyfied = workload_signature(
+        s, {"batch": (np.int64(8), np.int64(16)), "arch": "qwen",
+            "groups": [("a", np.int32(4)), ("b", 4)], "tags": {"x", "y"}},
+        devices=dev)
+    assert base == numpyfied
+    # nested dicts canonicalize recursively too
+    a = workload_signature(s, {"m": {"p": 1, "q": (2, 3)}}, devices=dev)
+    b = workload_signature(s, {"m": {"q": [2, 3], "p": 1}}, devices=dev)
+    assert a == b
+    # ...and a genuinely different payload still changes the hash
+    assert base != workload_signature(
+        s, {"batch": (8, 17), "arch": "qwen",
+            "groups": [("a", 4), ("b", 4)], "tags": {"x", "y"}}, devices=dev)
+
+
+def test_store_hit_with_permuted_workload_keys(tmp_path):
+    store = TuningStore(tmp_path / "t.json", devices="pinned")
+    Autotuner(small_space(), energy, record_to=store,
+              workload={"shape": (8, 16), "arch": "qwen"}).tune(
+        "SAM", iterations=20)
+    hit = store.lookup(small_space(), {"arch": "qwen", "shape": [8, 16]},
+                       "SAM")
+    assert hit is not None and hit.from_cache
+
+
 def test_space_fingerprint_sensitive_to_domain_and_ordinality():
     a = space_fingerprint(ConfigSpace([Param("x", (1, 2, 3))]))
     b = space_fingerprint(ConfigSpace([Param("x", (1, 2, 4))]))

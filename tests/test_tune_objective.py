@@ -1,0 +1,164 @@
+"""repro.tune.objective: objective composition, the platform model's
+energy column, metrics-evaluator adaptation, Pareto fronts."""
+
+import numpy as np
+import pytest
+
+from repro.core import DATASETS_GB, EmilPlatformModel, paper_space
+from repro.tune import (Energy, Metric, MetricsEvaluator, Pareto, Time,
+                        Weighted, as_metrics_evaluator, pareto_front)
+
+GB = DATASETS_GB["human"]
+
+
+# -- atomic objectives -----------------------------------------------------------
+
+def test_time_and_energy_pick_their_columns():
+    m = {"time": 2.0, "energy": 500.0}
+    assert Time()(m) == 2.0
+    assert Energy()(m) == 500.0
+    assert Metric("energy")(m) == 500.0
+    cols = {"time": np.array([1.0, 2.0]), "energy": np.array([10.0, 20.0])}
+    np.testing.assert_array_equal(Time().batch(cols), [1.0, 2.0])
+    np.testing.assert_array_equal(Energy().batch(cols), [10.0, 20.0])
+
+
+def test_objective_keys_and_requires():
+    w = Weighted(Time(), Energy(), weights=(1.0, 0.5))
+    assert w.key == "weighted(time*1,energy*0.5)"
+    assert set(w.requires) == {"time", "energy"}
+    p = Pareto(Time(), Energy())
+    assert p.key == "pareto(time,energy)"
+
+
+def test_weighted_math_scalar_and_batch():
+    w = Weighted(Time(), Energy(), weights=(2.0, 1.0), scales=(1.0, 100.0))
+    m = {"time": 3.0, "energy": 500.0}
+    assert w(m) == pytest.approx(2 * 3.0 + 500.0 / 100.0)
+    cols = {"time": np.array([3.0, 1.0]), "energy": np.array([500.0, 100.0])}
+    np.testing.assert_allclose(w.batch(cols), [11.0, 3.0])
+
+
+def test_weighted_validation():
+    with pytest.raises(ValueError):
+        Weighted()
+    with pytest.raises(ValueError):
+        Weighted(Time(), Energy(), weights=(1.0,))
+    with pytest.raises(ValueError):
+        Weighted(Time(), scales=(0.0,))
+
+
+def test_pareto_chebyshev_scalarisation():
+    p = Pareto(Time(), Energy(), scales=(1.0, 100.0))
+    assert p({"time": 3.0, "energy": 100.0}) == pytest.approx(3.0)
+    assert p({"time": 0.5, "energy": 400.0}) == pytest.approx(4.0)
+    with pytest.raises(ValueError):
+        Pareto(Time())                          # needs >= 2 objectives
+
+
+def test_pareto_front_helper():
+    pts = np.array([
+        [1.0, 5.0],     # on the front
+        [2.0, 2.0],     # on the front
+        [5.0, 1.0],     # on the front
+        [3.0, 3.0],     # dominated by (2,2)
+        [1.0, 5.0],     # duplicate of a front point: kept (not < anywhere)
+    ])
+    idx = set(pareto_front(pts).tolist())
+    assert idx == {0, 1, 2, 4}
+
+
+def test_non_time_objective_has_no_surrogate_form():
+    with pytest.raises(NotImplementedError):
+        Energy().surrogate_scalar(object())
+
+
+# -- the platform model's energy column ------------------------------------------
+
+CFG = {"host_threads": 24, "device_threads": 120,
+       "host_affinity": "scatter", "device_affinity": "balanced",
+       "host_fraction": 60}
+
+
+def test_metrics_record_consistent_with_time_oracle():
+    plat = EmilPlatformModel()
+    m = plat.metrics(CFG, GB, None)
+    assert set(m) == {"time", "energy", "t_host", "t_device"}
+    assert m["time"] == pytest.approx(plat.energy(CFG, GB, None))
+    assert m["time"] == pytest.approx(max(m["t_host"], m["t_device"]))
+    assert m["energy"] == pytest.approx(plat.joules(CFG, GB, None))
+    assert m["energy"] > 0
+
+
+def test_metrics_batch_matches_scalar_metrics():
+    plat = EmilPlatformModel()
+    space = paper_space(workload_step=20)
+    cols = space.enumerate_columns()
+    mb = plat.metrics_batch(cols, GB, None)
+    for k, cfg in enumerate(space.enumerate()):
+        if k % 13 == 0:
+            m = plat.metrics(cfg, GB, None)
+            for key in ("time", "energy", "t_host", "t_device"):
+                assert mb[key][k] == pytest.approx(m[key], rel=1e-12), key
+
+
+def test_metrics_batch_noise_stream_matches_energy_batch():
+    """Seeded noisy scores on the "time" column equal the time-only
+    batched oracle — the rng is consumed in the same order."""
+    plat = EmilPlatformModel()
+    space = paper_space(workload_step=25)
+    cols = space.enumerate_columns()
+    t1 = plat.energy_batch(cols, GB, np.random.default_rng(3))
+    t2 = plat.metrics_batch(cols, GB, np.random.default_rng(3))["time"]
+    np.testing.assert_allclose(t1, t2, rtol=1e-15)
+
+
+def test_energy_and_time_optima_differ():
+    """The Phi draws more power: the energy-optimal configuration shifts
+    work host-ward relative to the time-optimal one."""
+    plat = EmilPlatformModel()
+    space = paper_space(workload_step=10)
+    cols = space.enumerate_columns()
+    mb = plat.metrics_batch(cols, GB, None)
+    k_time = int(np.argmin(mb["time"]))
+    k_energy = int(np.argmin(mb["energy"]))
+    assert k_time != k_energy
+    assert (cols["host_fraction"][k_energy]
+            >= cols["host_fraction"][k_time])
+
+
+# -- evaluator adaptation --------------------------------------------------------
+
+def test_as_metrics_evaluator_adapts_scalar_and_mapping():
+    ev = as_metrics_evaluator(lambda c: 2.5)
+    assert ev.metrics({}) == {"time": 2.5}
+    ev2 = as_metrics_evaluator(lambda c: {"time": 1.0, "energy": 9.0})
+    assert ev2.metrics({}) == {"time": 1.0, "energy": 9.0}
+    assert as_metrics_evaluator(None) is None
+    assert as_metrics_evaluator(ev) is ev
+    with pytest.raises(TypeError):
+        as_metrics_evaluator("not callable")
+    with pytest.raises(ValueError):
+        as_metrics_evaluator(None, batch=lambda c: c)
+
+
+def test_metrics_evaluator_batch_paths():
+    ev = MetricsEvaluator(lambda c: 1.0,
+                          lambda cols: np.asarray([1.0, 2.0]))
+    np.testing.assert_array_equal(ev.metrics_batch({})["time"], [1.0, 2.0])
+    ev2 = MetricsEvaluator(lambda c: 1.0)
+    assert not ev2.has_batch
+    with pytest.raises(ValueError):
+        ev2.metrics_batch({})
+
+
+def test_platform_evaluator_convenience():
+    plat = EmilPlatformModel()
+    ev = plat.evaluator(GB, None)
+    assert ev.has_batch
+    m = ev.metrics(CFG)
+    assert m["time"] == pytest.approx(plat.energy(CFG, GB, None))
+    space = paper_space(workload_step=50)
+    mb = ev.metrics_batch(space.enumerate_columns())
+    assert set(mb) == {"time", "energy", "t_host", "t_device"}
+    assert len(mb["time"]) == space.size()

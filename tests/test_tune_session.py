@@ -1,0 +1,438 @@
+"""repro.tune session API: registry completeness, seeded parity with the
+deprecated legacy surfaces, store/warm-start/online wiring, and
+multi-objective end-to-end runs."""
+
+import numpy as np
+import pytest
+
+from helpers import FakeDevice
+
+from repro.core import (Autotuner, ConfigSpace, DATASETS_GB,
+                        EmilPlatformModel, Param, fit_emil_surrogates,
+                        paper_space)
+from repro.core.hetero import DeviceGroup, HeterogeneousRunner
+from repro.runtime import OnlineSurrogateLoop, TuningStore
+from repro.tune import (Energy, Pareto, Time, TuneResult, TuningSession,
+                        Weighted, get_strategy, list_strategies,
+                        register_strategy)
+from repro.tune.strategy import StrategyOutcome
+
+GB = DATASETS_GB["human"]
+
+
+# -- the registry ----------------------------------------------------------------
+
+def test_registry_reports_all_core_strategies():
+    names = list_strategies()
+    assert len(names) >= 6
+    for required in ("em", "eml", "sam", "saml", "random", "hillclimb"):
+        assert required in names
+    assert get_strategy("EM").name == "em"            # case-insensitive
+    with pytest.raises(ValueError, match="unknown strategy"):
+        get_strategy("nope")
+
+
+def test_registry_completeness_smoke():
+    """Every registered strategy must complete a search end-to-end on a
+    tiny space (the CI selfcheck, run inside tier-1)."""
+    from repro.tune.__main__ import selfcheck
+    names = selfcheck(verbose=False)
+    assert names == list_strategies()
+
+
+def test_register_strategy_extends_registry():
+    @register_strategy("first3", description="score the first 3 configs")
+    def first3(ctx, **_):
+        best, best_e, n = None, float("inf"), 0
+        for cfg in ctx.space.enumerate():
+            e = ctx.measure(cfg)
+            n += 1
+            if e < best_e:
+                best, best_e = cfg, e
+            if n == 3:
+                break
+        return StrategyOutcome(best, best_e, n_experiments=n)
+
+    try:
+        assert "first3" in list_strategies()
+        space = ConfigSpace([Param("x", (1, 2, 3, 4))])
+        res = TuningSession(space, evaluator=lambda c: c["x"]).run("first3")
+        assert res.best_config == {"x": 1}
+        assert res.n_experiments == 3
+        assert res.strategy == "FIRST3"
+    finally:
+        from repro.tune.strategy import _REGISTRY
+        _REGISTRY.pop("first3", None)
+
+
+# -- seeded parity with the deprecated shims -------------------------------------
+
+@pytest.fixture(scope="module")
+def emil():
+    plat = EmilPlatformModel()
+    sur, n_train = fit_emil_surrogates(
+        plat, GB, datasets_gb=list(DATASETS_GB.values()), n_estimators=30,
+        seed=0)
+    return plat, sur, n_train, paper_space(workload_step=25)
+
+
+def _legacy(plat, sur, n_train, space, noisy_seed=None):
+    rng = np.random.default_rng(noisy_seed) if noisy_seed is not None \
+        else None
+    return Autotuner(
+        space, measure=lambda c: plat.energy(c, GB, rng),
+        truth=lambda c: plat.energy(c, GB, None), surrogate=sur,
+        n_training_experiments=n_train,
+        measure_batch=lambda cols: plat.energy_batch(cols, GB, rng))
+
+
+def _session(plat, sur, n_train, space, noisy_seed=None):
+    rng = np.random.default_rng(noisy_seed) if noisy_seed is not None \
+        else None
+    return TuningSession(
+        space, evaluator=lambda c: plat.energy(c, GB, rng),
+        evaluator_batch=lambda cols: plat.energy_batch(cols, GB, rng),
+        truth=lambda c: plat.energy(c, GB, None), surrogate=sur,
+        n_training_experiments=n_train)
+
+
+@pytest.mark.parametrize("strategy,opts,noisy", [
+    ("em", {"engine": "batched"}, None),
+    ("em", {"engine": "scalar"}, 11),       # noisy: same rng stream per path
+    ("eml", {"engine": "batched"}, None),
+    ("eml", {"engine": "scalar"}, None),
+    ("sam", {"iterations": 80, "seed": 3, "checkpoints": (20, 80)}, 7),
+    ("saml", {"iterations": 120, "seed": 5, "checkpoints": (60,)}, None),
+    ("saml", {"iterations": 120, "seed": 5, "engine": "vectorized",
+              "n_chains": 8}, None),
+])
+def test_shim_bitwise_parity_and_deprecation(emil, strategy, opts, noisy):
+    """Every legacy Autotuner entry point emits a DeprecationWarning and
+    produces bit-identical results to the equivalent TuningSession run."""
+    plat, sur, n_train, space = emil
+    legacy_tuner = _legacy(plat, sur, n_train, space, noisy)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        legacy = getattr(legacy_tuner, f"tune_{strategy}")(**opts)
+    new = _session(plat, sur, n_train, space, noisy).run(strategy, **opts)
+    assert new.best_config == legacy.best_config
+    assert new.best_energy_search == legacy.best_energy_search
+    assert new.best_energy_measured == legacy.best_energy_measured
+    assert new.n_experiments == legacy.n_experiments
+    assert new.n_predictions == legacy.n_predictions
+    assert new.n_training_experiments == legacy.n_training_experiments
+    assert new.checkpoints == legacy.checkpoints
+    assert new.strategy == legacy.strategy
+
+
+def test_tune_fraction_sa_deprecated_and_parity():
+    """tune_fraction_sa warns and matches the equivalent session run
+    bit-for-bit under a deterministic step oracle."""
+    def make_runner():
+        groups = [DeviceGroup("a", [FakeDevice()] * 2),
+                  DeviceGroup("b", [FakeDevice()] * 2)]
+        r = HeterogeneousRunner(lambda g: (lambda chunk: None), *groups)
+
+        def fake_step(batch, rebalance=True):
+            f = r.fraction
+            t_a, t_b = f * 2.0, (1.0 - f) * 1.0
+            return {"fraction": f, "t_a": t_a, "t_b": t_b,
+                    "t_step": max(t_a, t_b), "rows_a": 0, "rows_b": 0}
+
+        r.step = fake_step
+        return r
+
+    batch = {"x": np.zeros((16, 4), np.float32)}
+    r1 = make_runner()
+    with pytest.warns(DeprecationWarning, match="tune_fraction_sa"):
+        f_legacy = r1.tune_fraction_sa(batch, iterations=25, seed=2)
+    r2 = make_runner()
+    f_new = r2.tune_fraction(batch, strategy="sam", iterations=25, seed=2)
+    assert f_new == f_legacy
+    # the optimum of max(2f, 1-f) is f = 1/3 -> nearest grid point 35%
+    assert 0.25 <= f_new <= 0.45
+
+
+# -- store / warm-start / online wiring ------------------------------------------
+
+def small_space():
+    return ConfigSpace([
+        Param("threads", (1, 2, 4, 8)),
+        Param("fraction", tuple(range(10, 100, 10))),
+    ])
+
+
+def energy(cfg):
+    return abs(cfg["fraction"] - 60) / 10.0 + 4.0 / cfg["threads"]
+
+
+def test_session_store_round_trip(tmp_path):
+    calls = {"n": 0}
+
+    def counting(cfg):
+        calls["n"] += 1
+        return energy(cfg)
+
+    store = TuningStore(tmp_path / "t.json", devices="pinned")
+    s1 = TuningSession(small_space(), evaluator=counting, store=store)
+    first = s1.run("sam", iterations=30, seed=0)
+    assert calls["n"] > 0 and not first.from_cache
+    n_first = calls["n"]
+
+    s2 = TuningSession(small_space(), evaluator=counting, store=store)
+    second = s2.run("sam", iterations=30, seed=0)
+    assert calls["n"] == n_first                   # zero new measurements
+    assert second.from_cache
+    assert second.best_config == first.best_config
+    assert isinstance(second, TuneResult)
+
+
+def test_store_keys_are_objective_scoped(tmp_path):
+    """The same strategy under different objectives must not collide."""
+    store = TuningStore(tmp_path / "t.json", devices="pinned")
+
+    def metrics(cfg):
+        return {"time": energy(cfg), "energy": 100.0 - cfg["fraction"]}
+
+    time_res = TuningSession(small_space(), evaluator=metrics,
+                             store=store).run("em", engine="scalar")
+    energy_res = TuningSession(small_space(), evaluator=metrics,
+                               objective=Energy(), store=store
+                               ).run("em", engine="scalar")
+    assert time_res.best_config != energy_res.best_config
+    # both cached independently
+    hit_t = TuningSession(small_space(), evaluator=metrics,
+                          store=store).run("em", engine="scalar")
+    hit_e = TuningSession(small_space(), evaluator=metrics,
+                          objective=Energy(), store=store
+                          ).run("em", engine="scalar")
+    assert hit_t.from_cache and hit_e.from_cache
+    assert hit_t.best_config == time_res.best_config
+    assert hit_e.best_config == energy_res.best_config
+
+
+def test_warm_start_seeds_local_search():
+    space = small_space()
+    best = {"threads": 8, "fraction": 60}
+    res = TuningSession(space, evaluator=energy, warm_start=best).run(
+        "hillclimb", iterations=1, seed=0)
+    # the walk starts AT the optimum: it must be retained
+    assert res.best_config == best
+    with pytest.raises(ValueError):
+        TuningSession(space, evaluator=energy,
+                      warm_start={"threads": 3, "fraction": 60})
+
+
+def test_warm_start_accepts_previous_result():
+    space = small_space()
+    coarse = TuningSession(space, evaluator=energy).run("random",
+                                                        samples=20, seed=1)
+    refined = TuningSession(space, evaluator=energy, warm_start=coarse)
+    res = refined.run("hillclimb", iterations=40, seed=1)
+    assert res.best_energy_measured <= coarse.best_energy_measured + 1e-12
+
+
+def test_budget_defaults_iterations():
+    space = small_space()
+    res = TuningSession(space, evaluator=energy, budget=17).run(
+        "random", seed=0)
+    # dedup can collapse repeats, but the budget bounds the draw count
+    assert 0 < res.n_experiments <= 17
+
+
+def _tiny_pair():
+    from repro.core import BoostedTreesRegressor, SurrogatePair
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0, 1, (60, 2))
+    y = X.sum(axis=1)
+    model = BoostedTreesRegressor(n_estimators=10, max_depth=2,
+                                  tree_method="hist")
+
+    def feats(cfg):
+        return np.asarray([float(cfg["threads"]),
+                           float(cfg["host_fraction"])])
+
+    return SurrogatePair(host=model.fit(X, y),
+                         device=BoostedTreesRegressor(
+                             n_estimators=10, max_depth=2,
+                             tree_method="hist").fit(X, y),
+                         host_features=feats, device_features=feats)
+
+
+def test_online_loop_receives_measurements():
+    """A measurement-strategy session feeds per-side times into the
+    attached OnlineSurrogateLoop."""
+    loop = OnlineSurrogateLoop(_tiny_pair(), refit_every=10_000)
+    space = ConfigSpace([
+        Param("threads", (1, 2, 4, 8)),
+        Param("host_fraction", tuple(range(10, 100, 10))),
+    ])
+
+    def measure(cfg):
+        f = cfg["host_fraction"] / 100.0
+        th = f * 8.0 / cfg["threads"]
+        td = (1.0 - f) * 1.2
+        return {"time": max(th, td), "t_host": th, "t_device": td}
+
+    session = loop.session(space, evaluator=measure)
+    res = session.run("random", samples=12, seed=0)
+    assert res.n_experiments > 0
+    assert loop.n_observations > 0
+
+
+# -- objectives end-to-end -------------------------------------------------------
+
+def test_weighted_time_energy_tunes_end_to_end():
+    """Acceptance: a Weighted(Time, Energy) objective tunes end-to-end on
+    the simulated platform, and lands between the single-objective
+    optima on both axes."""
+    plat = EmilPlatformModel()
+    space = paper_space(workload_step=10)
+    ev = plat.evaluator(GB, None)
+
+    def run(objective):
+        return TuningSession(space, evaluator=ev, objective=objective).run(
+            "em", engine="batched")
+
+    t = run(Time())
+    e = run(Energy())
+    w = run(Weighted(Time(), Energy(), scales=(1.0, 300.0)))
+    assert w.objective == "weighted(time*1,energy*1)"
+    assert set(w.best_metrics) >= {"time", "energy"}
+    assert t.best_config != e.best_config
+    assert t.best_metrics["time"] - 1e-9 <= w.best_metrics["time"] \
+        <= e.best_metrics["time"] + 1e-9
+    assert e.best_metrics["energy"] - 1e-9 <= w.best_metrics["energy"] \
+        <= t.best_metrics["energy"] + 1e-9
+
+
+def test_weighted_objective_with_sa_strategy():
+    plat = EmilPlatformModel()
+    space = paper_space(workload_step=10)
+    res = TuningSession(space, evaluator=plat.evaluator(GB, None),
+                        objective=Weighted(Time(), Energy(),
+                                           scales=(1.0, 300.0))).run(
+        "sam", iterations=120, seed=0)
+    assert res.n_experiments > 0
+    assert np.isfinite(res.best_energy_measured)
+    assert res.objective.startswith("weighted(")
+
+
+def test_pareto_front_on_enumerated_space():
+    plat = EmilPlatformModel()
+    space = paper_space(workload_step=20)
+    res = TuningSession(space, evaluator=plat.evaluator(GB, None),
+                        objective=Pareto(Time(), Energy(),
+                                         scales=(1.0, 300.0))).run(
+        "em", engine="batched")
+    front = res.pareto_front
+    assert len(front) >= 2
+    pts = np.asarray([row[0] for row in front])
+    # no front point dominates another
+    for i in range(len(pts)):
+        dom = np.all(pts[i] <= pts, axis=1) & np.any(pts[i] < pts, axis=1)
+        assert not dom.any()
+    # the front spans both extremes: its best time equals the
+    # time-objective optimum, its best energy the energy optimum
+    # (the argmin *config* itself may be dominated — a same-time config
+    # with less device slack can carry strictly lower energy)
+    t_best = TuningSession(space, evaluator=plat.evaluator(GB, None)).run(
+        "em", engine="batched")
+    e_best = TuningSession(space, evaluator=plat.evaluator(GB, None),
+                           objective=Energy()).run("em", engine="batched")
+    assert min(p[0] for p in pts.tolist()) == \
+        pytest.approx(t_best.best_metrics["time"], rel=1e-9)
+    assert min(p[1] for p in pts.tolist()) == \
+        pytest.approx(e_best.best_metrics["energy"], rel=1e-9)
+
+
+def test_surrogate_strategy_rejects_energy_objective():
+    plat = EmilPlatformModel()
+    sur, n_train = fit_emil_surrogates(plat, GB, n_estimators=10, seed=0)
+    session = TuningSession(paper_space(workload_step=25),
+                            evaluator=plat.evaluator(GB, None),
+                            objective=Energy(), surrogate=sur)
+    with pytest.raises(ValueError, match="needs a trained surrogate"):
+        session.run("saml", iterations=10)
+    # measurement strategies still work under the same session
+    res = session.run("random", samples=10, seed=0)
+    assert res.n_experiments > 0
+
+
+def test_pareto_batched_em_runs_one_measurement_pass():
+    """The front and the scalarised scores must come from ONE full-space
+    oracle pass — re-running would double-spend experiments and desync
+    noise draws."""
+    plat = EmilPlatformModel()
+    space = paper_space(workload_step=50)
+    calls = {"n": 0}
+
+    def batch(cols):
+        calls["n"] += 1
+        return plat.metrics_batch(cols, GB, None)
+
+    res = TuningSession(space, evaluator=lambda c: plat.metrics(c, GB, None),
+                        evaluator_batch=batch,
+                        objective=Pareto(Time(), Energy(),
+                                         scales=(1.0, 300.0))).run(
+        "em", engine="batched")
+    assert calls["n"] == 1
+    assert res.n_experiments == space.size()
+    assert len(res.pareto_front) >= 2
+
+
+def test_hillclimb_restart_moves_the_walk():
+    """After `patience` non-improving proposals the walk restarts FROM the
+    fresh random point (even though it scores worse), so the next
+    neighbor proposals explore the new basin instead of staying pinned
+    to the old optimum."""
+    space = ConfigSpace([Param("v", tuple(range(10)))])
+    calls = []
+
+    def f(cfg):
+        calls.append(cfg["v"])
+        return 0.0 if cfg["v"] == 0 else 1.0 + cfg["v"]
+
+    res = TuningSession(space, evaluator=f, warm_start={"v": 0}).run(
+        "hillclimb", iterations=6, seed=1, patience=1)
+    assert res.best_config == {"v": 0}      # global best is kept
+    # call order: warm, neighbor-of-0, restart, neighbor-of-restart, ...
+    # neighbors of 0 can only be 1 or 2; the post-restart proposals must
+    # instead be neighbors of the (worse) restart points
+    restart1, after1 = calls[2], calls[3]
+    restart2, after2 = calls[4], calls[5]
+    assert restart1 > 2 and abs(after1 - restart1) <= 2
+    assert restart2 > 2 and abs(after2 - restart2) <= 2
+
+
+def test_online_loop_receives_batched_measurements():
+    """The batched measurement path observes into the online loop too."""
+    loop = OnlineSurrogateLoop(_tiny_pair(), refit_every=10_000)
+    space = ConfigSpace([
+        Param("threads", (1, 2)),
+        Param("host_fraction", (20, 80)),
+    ])
+
+    def batch(cols):
+        f = np.asarray(cols["host_fraction"], float) / 100.0
+        th = f * 8.0 / np.asarray(cols["threads"], float)
+        td = (1.0 - f) * 1.2
+        return {"time": np.maximum(th, td), "t_host": th, "t_device": td}
+
+    res = loop.session(space, evaluator=lambda c: 0.0,
+                       evaluator_batch=batch).run("em", engine="batched")
+    assert res.n_experiments == space.size()
+    assert loop.n_observations == 2 * space.size()    # both sides per row
+
+
+# -- the experiments_fraction guard ----------------------------------------------
+
+def test_experiments_fraction_guards_degenerate_space():
+    kw = dict(strategy="EM", best_config={}, best_energy_search=1.0,
+              best_energy_measured=1.0, n_experiments=10, n_predictions=0,
+              n_training_experiments=0)
+    assert TuneResult(space_size=0, **kw).experiments_fraction == 0.0
+    assert TuneResult(space_size=-1, **kw).experiments_fraction == 0.0
+    assert TuneResult(space_size=40, **kw).experiments_fraction == 0.25
+    # the legacy alias shares the guard
+    from repro.core import TuneReport
+    assert TuneReport is TuneResult
