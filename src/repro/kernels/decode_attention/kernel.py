@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import grid_compiler_params, largest_aligned_divisor
+
 NEG_INF = -1e30
 
 
@@ -55,6 +57,7 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
 
 
 def decode_attention_kernel(q, k, v, length, *, block_s: int = 512,
+                            dims: str = "parallel",
                             interpret: bool = False):
     """q: (B, KV, rep, hd); k/v: (B, S, KV, hd); length: (1,) int32.
 
@@ -62,7 +65,7 @@ def decode_attention_kernel(q, k, v, length, *, block_s: int = 512,
     """
     b, kv, rep, hd = q.shape
     s_len = k.shape[1]
-    block_s = min(block_s, s_len)
+    block_s = largest_aligned_divisor(s_len, block_s, align=8)
     n_s = s_len // block_s
     kernel = functools.partial(_kernel, scale=hd ** -0.5, n_s=n_s,
                                block_s=block_s)
@@ -88,5 +91,6 @@ def decode_attention_kernel(q, k, v, length, *, block_s: int = 512,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kv, rep, hd), jnp.float32),
+        compiler_params=grid_compiler_params(dims, 2, 1),
         interpret=interpret,
     )(length, q, k, v)

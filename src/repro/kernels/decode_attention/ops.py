@@ -1,27 +1,44 @@
-"""Jit'd wrapper: (B, H, hd) x (B, S, KV, hd) GQA decode attention."""
+"""Jit'd wrapper: (B, H, hd) x (B, S, KV, hd) GQA decode attention.
+
+Launch parameters (``block_s``/``dims``) resolve defaults < tuned store
+(``tuned=``, see ``repro.tune.kernels``) < explicit overrides.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from .. import resolve_launch_params
 from .kernel import decode_attention_kernel
+
+DEFAULTS = {"block_s": 512, "dims": "parallel"}
 
 
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                      length: jax.Array | int | None = None,
-                     block_s: int = 512,
+                     block_s: int | None = None, dims: str | None = None,
+                     tuned: bool | None = None,
                      interpret: bool | None = None) -> jax.Array:
-    """q: (B, H, hd); k/v: (B, S, KV, hd). Returns (B, H, hd) fp32."""
+    """q: (B, H, hd); k/v: (B, S, KV, hd). Returns (B, H, hd) fp32.
+
+    ``tuned=True`` resolves the cached best launch parameters for this
+    (shape, dtype, backend) at trace time; ``tuned=None`` does so only
+    when tuning was enabled globally (``repro.tune.kernels.configure``).
+    """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     b, h, hd = q.shape
     kv = k.shape[2]
     rep = h // kv
+    meta = {"b": b, "kv": kv, "rep": rep, "hd": hd, "s": k.shape[1]}
+    p = resolve_launch_params(
+        "decode_attention", meta, q.dtype, defaults=DEFAULTS,
+        overrides={"block_s": block_s, "dims": dims}, tuned=tuned)
     if length is None:
         length = k.shape[1]
     length = jnp.asarray(length, jnp.int32).reshape(1)
     qg = q.reshape(b, kv, rep, hd)
-    out = decode_attention_kernel(qg, k, v, length, block_s=block_s,
-                                  interpret=interpret)
+    out = decode_attention_kernel(qg, k, v, length, block_s=p["block_s"],
+                                  dims=p["dims"], interpret=interpret)
     return out.reshape(b, h, hd)

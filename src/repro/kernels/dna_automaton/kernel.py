@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import grid_compiler_params, largest_aligned_divisor
+
 
 def _state_map_kernel(text_ref, table_ref, map_ref, *, chunk):
     tbl = table_ref[...]                          # (S, n_sym) int32
@@ -43,12 +45,10 @@ def _state_map_kernel(text_ref, table_ref, map_ref, *, chunk):
 
 
 def state_map_kernel(text, table, *, chunk: int = 2048,
-                     interpret: bool = False):
+                     dims: str = "parallel", interpret: bool = False):
     """text: (T,) int32; table: (S, n_sym) int32 -> maps (T/chunk, S)."""
     t = text.shape[0]
-    chunk = min(chunk, t)
-    while t % chunk:
-        chunk -= 1
+    chunk = largest_aligned_divisor(t, chunk)
     n_chunks = t // chunk
     s = table.shape[0]
     return pl.pallas_call(
@@ -60,6 +60,7 @@ def state_map_kernel(text, table, *, chunk: int = 2048,
         ],
         out_specs=pl.BlockSpec((1, s), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_chunks, s), jnp.int32),
+        compiler_params=grid_compiler_params(dims, 1, 0),
         interpret=interpret,
     )(text.astype(jnp.int32), table.astype(jnp.int32))
 
@@ -85,12 +86,10 @@ def _count_kernel(text_ref, table_ref, accept_ref, start_ref,
 
 
 def count_hits_kernel(text, table, accept, starts, *, chunk: int = 2048,
-                      interpret: bool = False):
+                      dims: str = "parallel", interpret: bool = False):
     """Counts accepting visits per chunk given per-chunk start states."""
     t = text.shape[0]
-    chunk = min(chunk, t)
-    while t % chunk:
-        chunk -= 1
+    chunk = largest_aligned_divisor(t, chunk)
     n_chunks = t // chunk
     return pl.pallas_call(
         functools.partial(_count_kernel, chunk=chunk),
@@ -109,6 +108,7 @@ def count_hits_kernel(text, table, accept, starts, *, chunk: int = 2048,
             jax.ShapeDtypeStruct((n_chunks,), jnp.int32),
             jax.ShapeDtypeStruct((n_chunks,), jnp.int32),
         ],
+        compiler_params=grid_compiler_params(dims, 1, 0),
         interpret=interpret,
     )(text.astype(jnp.int32), table.astype(jnp.int32),
       accept.astype(jnp.int32), starts.astype(jnp.int32))

@@ -12,9 +12,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import largest_aligned_divisor, resolve_launch_params
 from .kernel import count_hits_kernel, state_map_kernel
 
 DNA_SYMBOLS = "ACGT"
+
+DEFAULTS = {"map_chunk": 2048, "count_chunk": 2048, "dims": "parallel"}
 
 
 def build_motif_dfa(motif: str) -> tuple[np.ndarray, np.ndarray]:
@@ -52,19 +55,49 @@ def compose_maps(maps: jax.Array) -> jax.Array:
 
 
 def fa_match(text: jax.Array, table: jax.Array, accept: jax.Array, *,
-             chunk: int = 2048, start_state: int = 0,
+             chunk: int | None = None, map_chunk: int | None = None,
+             count_chunk: int | None = None, dims: str | None = None,
+             start_state: int = 0, tuned: bool | None = None,
              interpret: bool | None = None) -> jax.Array:
-    """Total motif matches in ``text`` ((T,) uint8 symbols). int32 scalar."""
+    """Total motif matches in ``text`` ((T,) uint8 symbols). int32 scalar.
+
+    The two passes chunk independently (``map_chunk``/``count_chunk``);
+    ``chunk`` sets both at once (legacy knob).  The count pass needs the
+    automaton state at its own chunk boundaries, so ``count_chunk`` must
+    be a multiple of ``map_chunk`` — otherwise it is clamped down to the
+    map granularity.  ``tuned=True`` resolves the cached best launch
+    parameters for this (shape, dtype, backend) at trace time;
+    ``tuned=None`` does so only when tuning was enabled globally
+    (``repro.tune.kernels.configure``).
+    """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     table = jnp.asarray(table, jnp.int32)
     accept = jnp.asarray(accept)
-    maps = state_map_kernel(text, table, chunk=chunk, interpret=interpret)
-    prefix = compose_maps(maps)                       # (n_chunks, S)
+    t = text.shape[0]
+    meta = {"t": t, "s": table.shape[0]}
+    p = resolve_launch_params(
+        "dna_automaton", meta, text.dtype, defaults=DEFAULTS,
+        overrides={"map_chunk": map_chunk if map_chunk is not None else chunk,
+                   "count_chunk": (count_chunk if count_chunk is not None
+                                   else chunk),
+                   "dims": dims},
+        tuned=tuned)
+    mc = largest_aligned_divisor(t, p["map_chunk"])
+    cc = largest_aligned_divisor(t, p["count_chunk"])
+    if cc % mc:
+        cc = mc
+    maps = state_map_kernel(text, table, chunk=mc,
+                            dims=p["dims"], interpret=interpret)
+    prefix = compose_maps(maps)                       # (T/mc, S)
+    # start state of count chunk k = automaton state at position k*cc,
+    # i.e. the prefix map after map chunk k*(cc/mc) - 1
+    rep = cc // mc
     starts = jnp.concatenate([
         jnp.asarray([start_state], jnp.int32),
-        prefix[:-1, start_state].astype(jnp.int32),
+        prefix[rep - 1::rep, start_state][:t // cc - 1].astype(jnp.int32),
     ])
-    counts, _ = count_hits_kernel(text, table, accept, starts, chunk=chunk,
+    counts, _ = count_hits_kernel(text, table, accept, starts,
+                                  chunk=cc, dims=p["dims"],
                                   interpret=interpret)
     return counts.sum(dtype=jnp.int32)

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import grid_compiler_params, largest_aligned_divisor
+
 NEG_INF = -1e30
 
 
@@ -69,12 +71,12 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
 
 def flash_attention_fwd(q, k, v, *, causal: bool = True, q_offset: int = 0,
                         block_q: int = 128, block_k: int = 128,
-                        interpret: bool = False):
+                        dims: str = "parallel", interpret: bool = False):
     """q/k/v: (BH, T, hd) with kv already head-repeated. Returns (o, lse)."""
     bh, tq, hd = q.shape
     tk = k.shape[1]
-    block_q = min(block_q, tq)
-    block_k = min(block_k, tk)
+    block_q = largest_aligned_divisor(tq, block_q, align=8)
+    block_k = largest_aligned_divisor(tk, block_k, align=8)
     n_q, n_k = tq // block_q, tk // block_k
     scale = hd ** -0.5
     kernel = functools.partial(_fwd_kernel, scale=scale, causal=causal,
@@ -100,6 +102,7 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True, q_offset: int = 0,
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q,), jnp.float32),
         ],
+        compiler_params=grid_compiler_params(dims, 2, 1),
         interpret=interpret,
     )(q, k, v)
 
@@ -164,11 +167,12 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 
 def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool = True,
                         q_offset: int = 0, block_q: int = 128,
-                        block_k: int = 128, interpret: bool = False):
+                        block_k: int = 128, dims: str = "parallel",
+                        interpret: bool = False):
     bh, tq, hd = q.shape
     tk = k.shape[1]
-    block_q = min(block_q, tq)
-    block_k = min(block_k, tk)
+    block_q = largest_aligned_divisor(tq, block_q, align=8)
+    block_k = largest_aligned_divisor(tk, block_k, align=8)
     n_q, n_k = tq // block_q, tk // block_k
     scale = hd ** -0.5
     delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
@@ -188,6 +192,7 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool = True,
         out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32)],
+        compiler_params=grid_compiler_params(dims, 2, 1),
         interpret=interpret,
     )(q, k, v, do, lse, delta)
 
@@ -211,6 +216,7 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal: bool = True,
                    jax.ShapeDtypeStruct(v.shape, v.dtype)],
         scratch_shapes=[pltpu.VMEM((block_k, hd), jnp.float32),
                         pltpu.VMEM((block_k, hd), jnp.float32)],
+        compiler_params=grid_compiler_params(dims, 2, 1),
         interpret=interpret,
     )(q, k, v, do, lse, delta)
     return dq, dk, dv

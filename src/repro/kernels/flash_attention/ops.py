@@ -1,7 +1,10 @@
 """Jit'd public wrapper: (B, T, H, hd) API + custom_vjp over the kernels.
 
 ``interpret=None`` auto-selects: Pallas interpret mode on CPU (validation),
-compiled Mosaic on TPU.
+compiled Mosaic on TPU.  Launch parameters (``block_q``/``block_k``/
+``dims``) resolve in three tiers: hardcoded defaults < the tuned-store
+best config for this shape/dtype (``tuned=`` — see
+``repro.tune.kernels``) < explicit keyword overrides.
 """
 
 from __future__ import annotations
@@ -11,7 +14,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .. import resolve_launch_params
 from .kernel import flash_attention_bwd, flash_attention_fwd
+
+DEFAULTS = {"block_q": 128, "block_k": 128, "dims": "parallel"}
 
 
 def _auto_interpret(interpret):
@@ -30,23 +36,27 @@ def _unfold(x, b, h):  # (B*H, T, hd) -> (B, T, H, hd)
     return x.reshape(b, h, t, hd).transpose(0, 2, 1, 3)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _flash(q, k, v, causal, q_offset, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, q_offset, interpret, block_q, block_k, dims):
     o, _ = flash_attention_fwd(q, k, v, causal=causal, q_offset=q_offset,
+                               block_q=block_q, block_k=block_k, dims=dims,
                                interpret=interpret)
     return o
 
 
-def _flash_fwd(q, k, v, causal, q_offset, interpret):
+def _flash_fwd(q, k, v, causal, q_offset, interpret, block_q, block_k, dims):
     o, lse = flash_attention_fwd(q, k, v, causal=causal, q_offset=q_offset,
+                                 block_q=block_q, block_k=block_k, dims=dims,
                                  interpret=interpret)
     return o, (q, k, v, o, lse)
 
 
-def _flash_bwd(causal, q_offset, interpret, res, do):
+def _flash_bwd(causal, q_offset, interpret, block_q, block_k, dims, res, do):
     q, k, v, o, lse = res
     dq, dk, dv = flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
-                                     q_offset=q_offset, interpret=interpret)
+                                     q_offset=q_offset, block_q=block_q,
+                                     block_k=block_k, dims=dims,
+                                     interpret=interpret)
     return dq, dk, dv
 
 
@@ -55,9 +65,24 @@ _flash.defvjp(_flash_fwd, _flash_bwd)
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, q_offset: int = 0,
+                    block_q: int | None = None, block_k: int | None = None,
+                    dims: str | None = None, tuned: bool | None = None,
                     interpret: bool | None = None) -> jax.Array:
-    """q/k/v: (B, T, H, hd), kv already head-repeated. Differentiable."""
+    """q/k/v: (B, T, H, hd), kv already head-repeated. Differentiable.
+
+    ``tuned=True`` resolves the cached best launch parameters for this
+    (shape, dtype, backend) from the kernel tuning store at trace time
+    (zero measurements; defaults on a miss); ``tuned=None`` does so only
+    when tuning was enabled globally (``repro.tune.kernels.configure``).
+    """
     b, t, h, hd = q.shape
     interp = _auto_interpret(interpret)
-    out = _flash(_fold(q), _fold(k), _fold(v), causal, q_offset, interp)
+    meta = {"bh": b * h, "tq": t, "tk": k.shape[1], "hd": hd,
+            "causal": bool(causal)}
+    p = resolve_launch_params(
+        "flash_attention", meta, q.dtype, defaults=DEFAULTS,
+        overrides={"block_q": block_q, "block_k": block_k, "dims": dims},
+        tuned=tuned)
+    out = _flash(_fold(q), _fold(k), _fold(v), causal, q_offset, interp,
+                 p["block_q"], p["block_k"], p["dims"])
     return _unfold(out, b, h)

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import grid_compiler_params, largest_aligned_divisor
+
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
             y_ref, h_out_ref, h_ref, *, chunk, n_chunks):
@@ -49,17 +51,14 @@ def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
 
 
 def selective_scan_kernel(x, delta, a, b, c, d, h0, *, block_d: int = 256,
-                          chunk: int = 64, interpret: bool = False):
+                          chunk: int = 64, dims: str = "parallel",
+                          interpret: bool = False):
     """x/delta: (B,T,dI) f32; a: (dI,S); b/c: (B,T,S); d: (dI,);
     h0: (B,dI,S).  Returns (y (B,T,dI) f32, h_T (B,dI,S) f32)."""
     bt, t, di = x.shape
     s = a.shape[1]
-    block_d = min(block_d, di)
-    while di % block_d:
-        block_d -= 1
-    chunk = min(chunk, t)
-    while t % chunk:
-        chunk -= 1
+    block_d = largest_aligned_divisor(di, block_d, align=8)
+    chunk = largest_aligned_divisor(t, chunk)
     n_chunks = t // chunk
     kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
     xspec = pl.BlockSpec((1, chunk, block_d), lambda b_, i, j: (b_, j, i))
@@ -83,5 +82,6 @@ def selective_scan_kernel(x, delta, a, b, c, d, h0, *, block_d: int = 256,
             jax.ShapeDtypeStruct((bt, di, s), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((block_d, s), jnp.float32)],
+        compiler_params=grid_compiler_params(dims, 2, 1),
         interpret=interpret,
     )(x, delta, a, b, c, d, h0)

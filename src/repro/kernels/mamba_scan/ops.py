@@ -1,4 +1,9 @@
-"""Jit'd wrapper for the selective-scan kernel (custom_vjp: ref backward)."""
+"""Jit'd wrapper for the selective-scan kernel (custom_vjp: ref backward).
+
+Launch parameters (``block_d``/``chunk``/``dims``) resolve defaults <
+tuned store (``tuned=``, see ``repro.tune.kernels``) < explicit
+overrides.
+"""
 
 from __future__ import annotations
 
@@ -7,23 +12,26 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .. import resolve_launch_params
 from .kernel import selective_scan_kernel
 from .ref import selective_scan_ref
 
+DEFAULTS = {"block_d": 256, "chunk": 64, "dims": "parallel"}
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
-def _scan(x, delta, a, b, c, d, h0, block_d, chunk, interpret):
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+def _scan(x, delta, a, b, c, d, h0, block_d, chunk, dims, interpret):
     return selective_scan_kernel(x, delta, a, b, c, d, h0, block_d=block_d,
-                                 chunk=chunk, interpret=interpret)
+                                 chunk=chunk, dims=dims, interpret=interpret)
 
 
-def _scan_fwd(x, delta, a, b, c, d, h0, block_d, chunk, interpret):
+def _scan_fwd(x, delta, a, b, c, d, h0, block_d, chunk, dims, interpret):
     out = selective_scan_kernel(x, delta, a, b, c, d, h0, block_d=block_d,
-                                chunk=chunk, interpret=interpret)
+                                chunk=chunk, dims=dims, interpret=interpret)
     return out, (x, delta, a, b, c, d, h0)
 
 
-def _scan_bwd(block_d, chunk, interpret, res, cts):
+def _scan_bwd(block_d, chunk, dims, interpret, res, cts):
     x, delta, a, b, c, d, h0 = res
     _, vjp = jax.vjp(lambda *args: selective_scan_ref(*args),
                      x, delta, a, b, c, d, h0)
@@ -33,15 +41,27 @@ def _scan_bwd(block_d, chunk, interpret, res, cts):
 _scan.defvjp(_scan_fwd, _scan_bwd)
 
 
-def selective_scan(x, delta, a, b, c, d, h0=None, *, block_d: int = 256,
-                   chunk: int = 64, interpret: bool | None = None):
-    """Differentiable fused selective scan; see kernel.py for layout."""
+def selective_scan(x, delta, a, b, c, d, h0=None, *,
+                   block_d: int | None = None, chunk: int | None = None,
+                   dims: str | None = None, tuned: bool | None = None,
+                   interpret: bool | None = None):
+    """Differentiable fused selective scan; see kernel.py for layout.
+
+    ``tuned=True`` resolves the cached best launch parameters for this
+    (shape, dtype, backend) at trace time; ``tuned=None`` does so only
+    when tuning was enabled globally (``repro.tune.kernels.configure``).
+    """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     bt, t, di = x.shape
     s = a.shape[1]
+    meta = {"bt": bt, "t": t, "di": di, "s": s}
+    p = resolve_launch_params(
+        "mamba_scan", meta, jnp.float32, defaults=DEFAULTS,
+        overrides={"block_d": block_d, "chunk": chunk, "dims": dims},
+        tuned=tuned)
     if h0 is None:
         h0 = jnp.zeros((bt, di, s), jnp.float32)
     f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
     return _scan(f32(x), f32(delta), f32(a), f32(b), f32(c), f32(d),
-                 f32(h0), block_d, chunk, interpret)
+                 f32(h0), p["block_d"], p["chunk"], p["dims"], interpret)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import grid_compiler_params, largest_aligned_divisor
+
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, s_out_ref,
             s_ref, *, chunk, n_chunks):
@@ -53,15 +55,13 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, s_out_ref,
 
 
 def wkv6_kernel(r, k, v, w, u, s0, *, chunk: int = 64,
-                interpret: bool = False):
+                dims: str = "parallel", interpret: bool = False):
     """r,k,v,w: (B, T, H, hd) f32; u: (H, hd); s0: (B, H, hd, hd).
 
     Returns (y (B,T,H,hd) f32, s_T (B,H,hd,hd) f32).
     """
     b, t, h, hd = r.shape
-    chunk = min(chunk, t)
-    while t % chunk:
-        chunk -= 1
+    chunk = largest_aligned_divisor(t, chunk)
     n_chunks = t // chunk
     kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
     seq_spec = pl.BlockSpec((1, chunk, 1, hd), lambda b_, h_, j: (b_, j, h_, 0))
@@ -82,5 +82,6 @@ def wkv6_kernel(r, k, v, w, u, s0, *, chunk: int = 64,
             jax.ShapeDtypeStruct((b, h, hd, hd), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        compiler_params=grid_compiler_params(dims, 2, 1),
         interpret=interpret,
     )(r, k, v, w, u, s0)

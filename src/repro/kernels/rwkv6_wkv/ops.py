@@ -5,6 +5,9 @@ recomputes through the reference recurrence with ``jax.vjp`` — state
 recurrences keep O(T) residuals otherwise; recompute-in-backward is the
 standard training strategy for linear-attention kernels (upstream code
 additionally chunk-remats, bounding the recompute window).
+
+Launch parameters (``chunk``/``dims``) resolve defaults < tuned store
+(``tuned=``, see ``repro.tune.kernels``) < explicit overrides.
 """
 
 from __future__ import annotations
@@ -14,21 +17,26 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .. import resolve_launch_params
 from .kernel import wkv6_kernel
 from .ref import wkv6_ref
 
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
-def _wkv(r, k, v, w, u, s0, chunk, interpret):
-    return wkv6_kernel(r, k, v, w, u, s0, chunk=chunk, interpret=interpret)
+DEFAULTS = {"chunk": 64, "dims": "parallel"}
 
 
-def _wkv_fwd(r, k, v, w, u, s0, chunk, interpret):
-    out = wkv6_kernel(r, k, v, w, u, s0, chunk=chunk, interpret=interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def _wkv(r, k, v, w, u, s0, chunk, dims, interpret):
+    return wkv6_kernel(r, k, v, w, u, s0, chunk=chunk, dims=dims,
+                       interpret=interpret)
+
+
+def _wkv_fwd(r, k, v, w, u, s0, chunk, dims, interpret):
+    out = wkv6_kernel(r, k, v, w, u, s0, chunk=chunk, dims=dims,
+                      interpret=interpret)
     return out, (r, k, v, w, u, s0)
 
 
-def _wkv_bwd(chunk, interpret, res, cts):
+def _wkv_bwd(chunk, dims, interpret, res, cts):
     r, k, v, w, u, s0 = res
     _, vjp = jax.vjp(lambda *a: wkv6_ref(*a), r, k, v, w, u, s0)
     return vjp(cts)
@@ -37,14 +45,24 @@ def _wkv_bwd(chunk, interpret, res, cts):
 _wkv.defvjp(_wkv_fwd, _wkv_bwd)
 
 
-def wkv6(r, k, v, w, u, s0=None, *, chunk: int = 64,
+def wkv6(r, k, v, w, u, s0=None, *, chunk: int | None = None,
+         dims: str | None = None, tuned: bool | None = None,
          interpret: bool | None = None):
-    """r,k,v,w: (B,T,H,hd) f32; u: (H,hd). Returns (y, s_T). Differentiable."""
+    """r,k,v,w: (B,T,H,hd) f32; u: (H,hd). Returns (y, s_T). Differentiable.
+
+    ``tuned=True`` resolves the cached best launch parameters for this
+    (shape, dtype, backend) at trace time; ``tuned=None`` does so only
+    when tuning was enabled globally (``repro.tune.kernels.configure``).
+    """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     b, t, h, hd = r.shape
+    meta = {"b": b, "t": t, "h": h, "hd": hd}
+    p = resolve_launch_params(
+        "rwkv6_wkv", meta, jnp.float32, defaults=DEFAULTS,
+        overrides={"chunk": chunk, "dims": dims}, tuned=tuned)
     if s0 is None:
         s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
     return _wkv(r.astype(jnp.float32), k.astype(jnp.float32),
                 v.astype(jnp.float32), w.astype(jnp.float32),
-                u.astype(jnp.float32), s0, chunk, interpret)
+                u.astype(jnp.float32), s0, p["chunk"], p["dims"], interpret)

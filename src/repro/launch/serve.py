@@ -7,6 +7,11 @@
 through ``repro.runtime.StreamingPipeline``, each batch chunk-scheduled
 across device groups (``--slow N`` reserves the last N devices as a
 second group), and the EWMA controller adapts the split per request mix.
+
+``--tuned-kernels STORE`` enables the kernel-autotuning fast path: the
+Pallas kernels resolve their cached best launch parameters (tuned via
+``repro.tune.kernels`` / ``benchmarks/bench_kernels.py``) per traced
+shape, with zero measurements at serve time.
 """
 
 from __future__ import annotations
@@ -258,10 +263,29 @@ def main() -> None:
     ap.add_argument("--tune-strategy", default="sam",
                     help="registered strategy for --tune-split "
                     "(see repro.tune.list_strategies())")
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["auto", "xla", "pallas"],
+                    help="override the arch's mixer implementation "
+                    "(pallas = the repro.kernels suite; interpret mode "
+                    "on CPU)")
+    ap.add_argument("--tuned-kernels", default=None, metavar="STORE",
+                    help="kernel tuning store (JSON from "
+                    "repro.tune.kernels.tune_kernel / bench_kernels.py); "
+                    "Pallas kernels resolve their cached best launch "
+                    "params for each traced shape, defaults on a miss")
     args = ap.parse_args()
     cfg = configs.get(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
+    if args.attn_impl:
+        from dataclasses import replace
+        cfg = replace(cfg, attn_impl=args.attn_impl)
+    if args.tuned_kernels:
+        # every kernel op called with tuned=None (the models' default)
+        # now resolves through this store at trace time — serving runs
+        # the tuned launch parameters with zero extra measurements
+        from ..tune import kernels as ktune
+        ktune.configure(args.tuned_kernels)
     if args.stream:
         # the scheduler needs >= 1 request row per device: on small
         # --batch runs use only as many devices as there are rows

@@ -167,7 +167,10 @@ def full_attention(p: Params, x: jax.Array, cfg: ArchConfig, *,
 
     if cfg.attn_impl == "pallas":
         from ..kernels.flash_attention import ops as fa_ops
-        out = fa_ops.flash_attention(q, kr, vr, causal=causal)
+        # tuned=None: resolves the cached best launch params when kernel
+        # tuning is enabled (repro.tune.kernels.configure; serve.py's
+        # --tuned-kernels), hardcoded defaults otherwise
+        out = fa_ops.flash_attention(q, kr, vr, causal=causal, tuned=None)
     else:
         out = blockwise_attention(q, kr, vr, causal=causal)
     out = constrain(out, "batch", None, "heads", None)
@@ -237,7 +240,8 @@ def decode_attention(p: Params, x: jax.Array, cache: Params,
     if cfg.attn_impl == "pallas":
         from ..kernels.decode_attention import ops as da_ops
         out = da_ops.decode_attention(q[:, 0], k, v,
-                                      length=None if cross else pos + 1)
+                                      length=None if cross else pos + 1,
+                                      tuned=None)
     else:
         scale = cfg.head_dim ** -0.5
         kh = _repeat_kv(k, cfg.n_heads)

@@ -91,8 +91,10 @@ def apply_mamba(p: Params, x: jax.Array, cfg: ArchConfig,
 
     if cfg.attn_impl == "pallas":
         from ..kernels.mamba_scan import ops as ms_ops
+        # tuned=None: cached best launch params when kernel tuning is
+        # enabled (repro.tune.kernels.configure), defaults otherwise
         y, h_final = ms_ops.selective_scan(
-            xf, delta, a, b_ssm, c_ssm, p["D"])
+            xf, delta, a, b_ssm, c_ssm, p["D"], tuned=None)
         y = y.astype(dtc) * jax.nn.silu(z)
         out = y @ p["out_proj"].astype(dtc)
         out = constrain(out, "batch", None, None)

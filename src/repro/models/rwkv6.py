@@ -141,7 +141,8 @@ def apply_rwkv_tmix(p: Params, x: jax.Array, cfg: ArchConfig,
         from ..kernels.rwkv6_wkv import ops as wkv_ops
         s0 = state["wkv"] if state is not None else None
         y, s_t = wkv_ops.wkv6(r.astype(jnp.float32), k.astype(jnp.float32),
-                              v.astype(jnp.float32), w, p["u"], s0)
+                              v.astype(jnp.float32), w, p["u"], s0,
+                              tuned=None)
     else:
         s0 = state["wkv"] if state is not None else None
         y, s_t = wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),

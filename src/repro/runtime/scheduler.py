@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import time
 from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
@@ -121,7 +122,10 @@ class ChunkedScheduler:
         dispatch depth (2 = double buffering).  ``row_quantum`` coarsens
         chunk-size rounding to multiples of ``quantum * n_devices`` rows:
         jitted step functions recompile per distinct chunk shape, so a
-        coarser quantum keeps the shape set small while shares drift."""
+        coarser quantum keeps the shape set small while shares drift.
+        Controller-driven steps additionally serve their row/chunk plan
+        from a debounced cache (see ``_planned_rows``) so timing noise
+        never churns the compiled-shape set."""
         if not groups:
             raise ValueError("need at least one device group")
         if chunks_per_group < 1 or inflight < 1 or row_quantum < 1:
@@ -135,6 +139,7 @@ class ChunkedScheduler:
         self.inflight = inflight
         self.row_quantum = row_quantum
         self._fns = [step_builder(g) for g in self.groups]
+        self._plans: dict[int, dict] = {}    # batch rows -> row/chunk plan
         self.history: list[dict] = []
 
     @property
@@ -177,6 +182,55 @@ class ChunkedScheduler:
         rows[big] = rest
         return rows
 
+    def _planned_rows(self, n: int, rebalance: bool) -> tuple[list[int], bool]:
+        """(row plan for this step, whether a known size's plan changed).
+
+        Recompiles are the dominant cost of chunked dispatch: every new
+        row split means new chunk shapes, and on near-equal groups the
+        EWMA's response to timing noise would produce a new split almost
+        every step — each recompile then poisons the next measurement,
+        drifting the shares further (the positive-feedback loop behind
+        the old 4x online-vs-static gap in BENCH_runtime.json).  Two
+        regimes break it:
+
+          * ``rebalance=False`` — the caller manages the shares (e.g. a
+            split tuner sweeping fractions): the freshly computed plan is
+            always honored, so measurements reflect the assigned split;
+          * ``rebalance=True`` — controller-driven: the cached plan (and
+            with it every compiled chunk shape) is reused until the
+            freshly computed plan **deviates from it on two consecutive
+            steps**.  A single noisy measurement moves the shares once
+            and the next clean measurement pulls them back, so one-step
+            flicker never recompiles; persistent movement (real skew,
+            convergence) lands its new plan one step later.
+
+        Plans are cached per batch size, so a stream whose row count
+        alternates between known sizes reuses each size's compiled
+        shapes and keeps rebalancing on every step.  ``step`` skips the
+        controller update on share-driven replan steps (their measured
+        times include compilation of the new shapes and would re-poison
+        the shares); a first-seen batch size does not suppress the
+        update — freezing the shares on an all-new-sizes stream would be
+        worse than one noisy measurement per size.
+        """
+        fresh = self.plan_rows(n)
+        plan = self._plans.get(n)
+        if plan is not None:
+            if fresh == plan["rows"]:
+                plan["pending"] = None
+                return plan["rows"], False
+            if rebalance and plan["pending"] is None:
+                plan["pending"] = list(fresh)    # first deviation: debounce
+                return plan["rows"], False
+        if len(self._plans) >= 64 and n not in self._plans:
+            self._plans.pop(next(iter(self._plans)))   # bound the cache
+        self._plans[n] = {"rows": list(fresh), "pending": None,
+                          "chunks": [self._chunk_sizes(r, len(g.devices))
+                                     for r, g in zip(fresh, self.groups)]}
+        # a replan of a known size is share-driven (possibly
+        # compile-tainted measurement); a new size is just a new plan
+        return self._plans[n]["rows"], plan is not None
+
     def _chunk_sizes(self, rows: int, align: int) -> list[int]:
         """Split one group's share into up to ``chunks_per_group`` aligned
         chunks (first chunk takes any residual); rounding uses the row
@@ -198,33 +252,38 @@ class ChunkedScheduler:
             if blocker is not None:
                 blocker()
 
-    @staticmethod
-    def _is_ready(result) -> bool | None:
-        """True/False when every blockable leaf answers ``is_ready``;
-        None when some leaf can only block (duck-typed results)."""
-        ready = True
-        for leaf in jax.tree.leaves(result):
-            probe = getattr(leaf, "is_ready", None)
-            if probe is None:
-                if getattr(leaf, "block_until_ready", None) is not None:
-                    return None
-                continue
-            if not probe():
-                ready = False
-        return ready
+    @property
+    def _drain_pool(self) -> ThreadPoolExecutor:
+        # lazy: schedulers built in tests/benches that never step should
+        # not spawn threads (an unreferenced scheduler's idle workers
+        # also exit on GC via the executor's weakref sentinel)
+        pool = getattr(self, "_pool", None)
+        if pool is None:
+            pool = self._pool = ThreadPoolExecutor(
+                max_workers=len(self.groups),
+                thread_name_prefix="chunked-drain")
+        return pool
+
+    def close(self) -> None:
+        """Release the drain worker threads of a long-lived scheduler."""
+        pool = getattr(self, "_pool", None)
+        if pool is not None:
+            pool.shutdown(wait=False)
+            self._pool = None
 
     # -- the online step ---------------------------------------------------
     def step(self, batch: dict, rebalance: bool = True) -> dict:
         """Dispatch one batch; returns the step record (and appends it to
         ``history``)."""
         n = jax.tree.leaves(batch)[0].shape[0]
-        rows = self.plan_rows(n)
+        rows, plan_changed = self._planned_rows(n, rebalance)
 
         # contiguous per-group row ranges, then per-group chunk slices
+        # (sizes come from the plan cache — no recompute per step)
         offsets = np.concatenate([[0], np.cumsum(rows)])
         chunks: list[list[dict]] = []
         for gi, g in enumerate(self.groups):
-            sizes = self._chunk_sizes(rows[gi], len(g.devices))
+            sizes = self._plans[n]["chunks"][gi]
             lo = int(offsets[gi])
             group_chunks = []
             for s in sizes:
@@ -235,34 +294,26 @@ class ChunkedScheduler:
 
         t0 = time.perf_counter()
         pending: list[deque] = [deque() for _ in self.groups]
+        # per-group clocks start at the group's own first dispatch:
+        # measuring every group from the common t0 would bill group k the
+        # dispatch latency of groups 0..k-1, and the controller would
+        # "rebalance" that constant bias into a real share drift on
+        # equal-speed groups (new shapes, recompiles) — group times must
+        # estimate device speed, not dispatch order
+        t_start = [None] * len(self.groups)
         t_done = [0.0] * len(self.groups)
+        t_done_abs = [0.0] * len(self.groups)
         chunk_times: list[list[float]] = [[] for _ in self.groups]
 
         def record(gi: int) -> None:
-            t = time.perf_counter() - t0
-            chunk_times[gi].append(t)
-            t_done[gi] = t
+            now = time.perf_counter()
+            chunk_times[gi].append(now - t_start[gi])
+            t_done[gi] = now - t_start[gi]
+            t_done_abs[gi] = now - t0
 
         def drain_one(gi: int) -> None:
             self._block(pending[gi].popleft())
             record(gi)
-
-        def poll_sweep() -> bool:
-            """Non-blockingly pop every already-completed head chunk so
-            completion timestamps are recorded close to when they happen.
-            Returns False when some head result is poll-incapable."""
-            pollable = True
-            for gi, q in enumerate(pending):
-                while q:
-                    ready = self._is_ready(q[0])
-                    if ready is None:
-                        pollable = False
-                        break
-                    if not ready:
-                        break
-                    q.popleft()
-                    record(gi)
-            return pollable
 
         # interleave dispatch round-robin by chunk index so every group
         # starts working immediately; bound the per-group queue depth
@@ -273,20 +324,23 @@ class ChunkedScheduler:
                     continue
                 if len(pending[gi]) >= self.inflight:
                     drain_one(gi)
+                if t_start[gi] is None:
+                    t_start[gi] = time.perf_counter()
                 pending[gi].append(self._fns[gi](chunks[gi][ci]))
-            poll_sweep()
-        # drain by polling so a fast group's finish time is never inflated
-        # to a slower group's (blocking group-by-group would timestamp a
-        # later-indexed fast group at the slow group's completion); fall
-        # back to ordered blocking for results that cannot be polled
-        while any(pending):
-            if not poll_sweep():
-                for gi in range(len(self.groups)):
-                    while pending[gi]:
-                        drain_one(gi)
-                break
-            if any(pending):
-                time.sleep(2e-5)
+        # drain each group in its own worker thread: block_until_ready
+        # releases the GIL, so every group's completion is timestamped
+        # exactly when it happens (a later-indexed fast group is never
+        # measured at a slower group's completion), with zero host-side
+        # polling — the old is_ready/sleep loop cost ~ms per step in
+        # redundant host syncs
+        def drain_group(gi: int) -> None:
+            while pending[gi]:
+                drain_one(gi)
+
+        futures = [self._drain_pool.submit(drain_group, gi)
+                   for gi in range(len(self.groups)) if pending[gi]]
+        for f in futures:
+            f.result()                 # re-raises worker exceptions
 
         times = [max(t, 1e-9) for t in t_done]
         rec = {
@@ -295,10 +349,17 @@ class ChunkedScheduler:
             "n_chunks": [len(c) for c in chunks],
             "t_group": times,
             "t_chunks": chunk_times,
-            "t_step": max(times),
+            # makespan on the common clock (dispatch latency included);
+            # t_group above are per-group durations from each group's
+            # own first dispatch (what the controller consumes)
+            "t_step": max(max(t, 1e-9) for t in t_done_abs),
+            "plan_changed": plan_changed,
         }
         self.history.append(rec)
-        if rebalance:
+        if rebalance and not plan_changed:
+            # a plan-change step's times include compiling the new chunk
+            # shapes — feeding them to the controller would re-poison the
+            # shares the moment the plan stabilizes
             self.controller.update(times, rows=rows)
         return rec
 

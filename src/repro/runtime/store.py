@@ -146,6 +146,24 @@ class TuningStore:
             return None
         return _report_from_json(entry["reports"][strategy.upper()])
 
+    def best_record(self, space: ConfigSpace,
+                    workload: Mapping[str, Any] | None) -> TuneReport | None:
+        """Best recorded report for a workload across *all* strategies.
+
+        This is the resolution path of the kernel ``tuned=`` fast path
+        (``repro.tune.kernels.resolve_config``): whichever strategy
+        produced the lowest measured score wins, no matter which one the
+        caller tuned with.  Returns ``None`` when the workload has no
+        entry (callers fall back to their defaults).
+        """
+        entry = self._data.get(self.signature(space, workload))
+        if entry is None or not entry.get("reports"):
+            return None
+        best = min(entry["reports"].values(),
+                   key=lambda d: float(d.get("best_energy_measured",
+                                             float("inf"))))
+        return _report_from_json(best)
+
     def record(self, space: ConfigSpace,
                workload: Mapping[str, Any] | None,
                strategy: str, report: TuneReport) -> str:

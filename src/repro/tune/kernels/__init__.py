@@ -1,0 +1,105 @@
+"""repro.tune.kernels — autotuning for the Pallas kernel suite.
+
+Closes the loop between the paper's tuning stack (``repro.tune``
+sessions, BDTR surrogate, ``TuningStore``) and the repo's hottest code:
+each kernel's launch parameters (block sizes, chunk lengths, grid
+semantics) are a :class:`~repro.core.space.ConfigSpace`, candidates are
+evaluated by a timed-execution oracle that gates on numerical parity
+against the kernel's ``ref.py`` (invalid configs score ``inf`` instead
+of crashing the search), and the session strategies — ``saml`` by
+default — keep measured experiments to <=5% of each space.
+
+Three surfaces:
+
+  * :func:`tune_kernel` — search one (kernel, shape, dtype) and persist
+    the winner in a ``TuningStore``;
+  * :func:`configure` / :func:`resolve_config` — the serving side: once
+    a store is configured, every kernel op called with ``tuned=True``
+    (or ``tuned=None`` after ``configure(..., enabled=True)``) resolves
+    its cached best config at trace time with zero measurements,
+    falling back to the hardcoded defaults on a miss;
+  * :func:`register_kernel` — add a new kernel's space (see
+    ``docs/kernels.md``).
+
+Usage::
+
+    from repro.tune import kernels as ktune
+
+    out = ktune.tune_kernel("flash_attention", store="kernels.json")
+    ktune.configure("kernels.json")          # enable the tuned path
+    # ... flash_attention(q, k, v) now runs the tuned launch params
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Mapping
+
+from .evaluate import KernelTimer, VMEM_BUDGET_BYTES
+from .registry import (KernelSpec, get_kernel, kernel_workload, list_kernels,
+                       register_kernel)
+from .tuner import KernelTuneOutcome, tune_kernel
+from . import specs as _specs  # noqa: F401  (registers the five kernels)
+
+__all__ = [
+    "KernelSpec", "KernelTimer", "KernelTuneOutcome", "VMEM_BUDGET_BYTES",
+    "configure", "disable", "get_kernel", "kernel_workload", "list_kernels",
+    "register_kernel", "resolve_config", "tune_kernel", "tuning_enabled",
+]
+
+# Global tuned-path state: the store serving ``resolve_config`` plus the
+# enable flag consulted by ops called with ``tuned=None``.  The resolve
+# cache memoizes per (kernel, shape, dtype, backend) so repeated traces
+# do not re-read the store.
+_state: dict = {"store": None, "enabled": False, "cache": {}}
+
+
+def configure(store: Any = None, *, enabled: bool = True) -> None:
+    """Install the kernel tuning store (path or ``TuningStore``).
+
+    ``enabled=True`` switches every kernel op's default (``tuned=None``)
+    to tuned resolution; ``enabled=False`` installs the store for
+    explicit ``tuned=True`` calls only.
+    """
+    if isinstance(store, (str, os.PathLike)):
+        from ...runtime.store import TuningStore
+        store = TuningStore(store)
+    _state.update(store=store, enabled=bool(enabled), cache={})
+
+
+def disable() -> None:
+    """Drop the tuned-path store and flag (ops fall back to defaults)."""
+    _state.update(store=None, enabled=False, cache={})
+
+
+def tuning_enabled() -> bool:
+    return bool(_state["enabled"]) and _state["store"] is not None
+
+
+def resolve_config(kernel: str, meta: Mapping[str, Any], dtype: Any) -> dict:
+    """Cached best launch params for (kernel, shape, dtype, backend).
+
+    Pure lookup — zero measurements.  Returns ``{}`` when no store is
+    configured, the kernel is unregistered, or the store has no entry
+    for this workload signature (the caller keeps its defaults).
+    """
+    store = _state["store"]
+    if store is None:
+        return {}
+    import jax.numpy as jnp
+
+    key = (kernel,
+           tuple(sorted((str(k), v) for k, v in meta.items())),
+           str(jnp.dtype(dtype)))
+    cache = _state["cache"]
+    if key not in cache:
+        try:
+            spec = get_kernel(kernel)
+        except ValueError:
+            cache[key] = {}
+        else:
+            space = spec.space(meta)
+            rec = store.best_record(space, kernel_workload(kernel, meta,
+                                                           dtype))
+            cache[key] = dict(rec.best_config) if rec is not None else {}
+    return cache[key]

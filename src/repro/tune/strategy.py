@@ -322,7 +322,13 @@ def _counts(ev, measured: bool) -> dict:
 def _random(ctx: SearchContext, *, samples: int | None = None,
             iterations: int | None = None, seed: int = 0,
             checkpoints: Sequence[int] = (), **_) -> StrategyOutcome:
-    """Sample ``samples`` uniform configs, keep the best."""
+    """Sample ``samples`` uniform configs, keep the best.
+
+    A ``warm_start`` (when the session provides one) is evaluated as the
+    first sample, so the search result is never worse than the caller's
+    known-good configuration — and never ``None`` even if every random
+    draw scores ``inf`` (e.g. invalid kernel launch configs).
+    """
     n = samples or iterations or ctx.budget or 100
     ev, measured = _search_oracle(ctx, "random")
     rng = np.random.default_rng(seed)
@@ -330,9 +336,12 @@ def _random(ctx: SearchContext, *, samples: int | None = None,
     checkpoint_set = set(int(c) for c in checkpoints)
     best, best_e = None, float("inf")
     for it in range(1, n + 1):
-        cfg = ctx.space.random(rng)
+        if it == 1 and ctx.warm_start is not None:
+            cfg = dict(ctx.warm_start)
+        else:
+            cfg = ctx.space.random(rng)
         e = ev(cfg)
-        if e < best_e:
+        if best is None or e < best_e:
             best, best_e = dict(cfg), e
         if it in checkpoint_set:
             cps[it] = (best_e, dict(best))

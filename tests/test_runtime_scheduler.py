@@ -161,6 +161,67 @@ def test_row_quantum_stabilizes_chunk_shapes():
     assert all(s % 4 == 0 for s in shapes)
 
 
+def test_plan_cache_debounces_noise_but_adopts_persistent_moves():
+    """Regression for the 4x real_dispatch gap: a one-step share flicker
+    must reuse the cached plan (no new chunk shapes -> no recompiles),
+    while a deviation persisting two steps adopts the new plan — and the
+    adoption step must not feed its (compile-tainted) times back into
+    the controller."""
+    sched = ChunkedScheduler(make_serial_sim_builder(), sim_groups(),
+                             controller=EwmaController(2, min_share=0.02))
+    batch = {"x": np.zeros((64, 2), np.float32)}
+
+    rec = sched.step(batch, rebalance=False)       # adopt the initial plan
+    base_rows = rec["rows"]
+
+    # flicker: shares move once, then back — plan must never change
+    sched.controller.shares = np.asarray([0.7, 0.3])
+    rec = sched.step(batch)
+    assert rec["rows"] == base_rows and not rec["plan_changed"]
+    sched.controller.shares = np.asarray([0.5, 0.5])
+    rec = sched.step(batch)
+    assert rec["rows"] == base_rows and not rec["plan_changed"]
+
+    # persistent move: two consecutive deviating steps adopt the plan
+    sched.controller.shares = np.asarray([0.75, 0.25])
+    first = sched.step(batch)
+    assert first["rows"] == base_rows and not first["plan_changed"]
+    shares_before = sched.controller.shares.copy()
+    second = sched.step(batch)
+    assert second["plan_changed"] and second["rows"] != base_rows
+    # ... without rebalancing on the adoption step itself
+    np.testing.assert_allclose(sched.controller.shares, shares_before)
+
+
+def test_variable_batch_sizes_still_rebalance():
+    """Regression: plans cache per batch size — a stream alternating
+    between sizes must not mark every step as a plan change (which
+    would suppress the controller update and freeze the shares)."""
+    sched = ChunkedScheduler(
+        make_serial_sim_builder(0.0004), sim_groups(skew=3),
+        controller=EwmaController(2, min_share=0.02))
+    batches = [{"x": np.zeros((n, 4), np.float32)} for n in (128, 96)]
+    for i in range(24):
+        sched.step(batches[i % 2])
+    # 3:1 skew -> the fast group's share must converge toward 0.75
+    assert sched.shares[0] == pytest.approx(0.75, abs=0.06)
+
+
+def test_rebalance_off_always_honors_fresh_plan():
+    """Callers that assign shares directly (split tuners sweeping
+    fractions) must see their split take effect on the very next step."""
+    sched = ChunkedScheduler(make_serial_sim_builder(), sim_groups())
+    batch = {"x": np.zeros((64, 2), np.float32)}
+    rows = []
+    for f in (0.5, 0.55, 0.7, 0.3):
+        sched.controller.shares = np.asarray([f, 1 - f])
+        rec = sched.step(batch, rebalance=False)
+        # the dispatched rows are exactly the freshly planned split
+        assert rec["rows"] == sched.plan_rows(64)
+        rows.append(tuple(rec["rows"]))
+    assert rows[0] != rows[2] != rows[3]
+
+
 # -- real sharded dispatch (subprocess, 8 host devices) --------------------------
 
 def test_real_dispatch_results_and_rebalance():
