@@ -1,11 +1,17 @@
 """Flash-decode Pallas TPU kernel: one query token vs a long KV cache.
 
-Grid (B, KV, S/bs): for each (batch, kv-head) the kernel streams cache
-blocks through VMEM, carrying the online-softmax state for the
-``rep = H/KV`` query heads that share this kv head.  The grouped layout
-makes the score matmul (rep x hd) @ (hd x bs) — MXU-shaped when rep is
-padded to 8 sublanes — and reads each cache block exactly once (the HBM
-roofline for decode).
+Grid (B, KV, splits, S/splits/bs): for each (batch, kv-head) the cache
+is partitioned into ``splits`` independent segments; each segment
+streams its blocks through VMEM, carrying the online-softmax state for
+the ``rep = H/KV`` query heads that share this kv head, and emits an
+*unnormalised* partial (acc, m, l).  The partials are combined outside
+the kernel with one logsumexp rescale — the standard split-KV decode
+trick: more segments expose more grid parallelism on a cache too long
+for one sequential sweep, at the cost of a (tiny) combine.  The grouped
+layout makes the score matmul (rep x hd) @ (hd x bs) — MXU-shaped when
+rep is padded to 8 sublanes — and reads each cache block exactly once
+(the HBM roofline for decode).  ``splits`` and ``block_s`` are both
+tuned (``repro.tune.kernels``).
 
 A ``length`` scalar (SMEM) masks positions >= length, so one compiled
 kernel serves any fill level of a fixed-capacity cache.
@@ -25,9 +31,10 @@ from .. import grid_compiler_params, largest_aligned_divisor
 NEG_INF = -1e30
 
 
-def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
-            *, scale, n_s, block_s):
-    js = pl.program_id(2)
+def _kernel(len_ref, q_ref, k_ref, v_ref, acc_out_ref, m_out_ref, l_out_ref,
+            acc_ref, m_ref, l_ref, *, scale, n_s, block_s, seg):
+    sp = pl.program_id(2)
+    js = pl.program_id(3)
 
     @pl.when(js == 0)
     def _init():
@@ -38,7 +45,8 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
     q = q_ref[0, 0].astype(jnp.float32) * scale       # (rep, hd)
     k = k_ref[0][:, 0].astype(jnp.float32)            # (bs, hd)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (rep, bs)
-    pos = js * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    pos = (sp * seg + js * block_s
+           + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1))
     s = jnp.where(pos < len_ref[0], s, NEG_INF)
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, s.max(axis=1))
@@ -51,13 +59,13 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
 
     @pl.when(js == n_s - 1)
     def _final():
-        o_ref[0, 0] = (acc_ref[...]
-                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
-                       ).astype(o_ref.dtype)
+        acc_out_ref[0, 0, 0] = acc_ref[...]
+        m_out_ref[0, 0, 0] = m_ref[...]
+        l_out_ref[0, 0, 0] = l_ref[...]
 
 
 def decode_attention_kernel(q, k, v, length, *, block_s: int = 512,
-                            dims: str = "parallel",
+                            splits: int = 1, dims: str = "parallel",
                             interpret: bool = False):
     """q: (B, KV, rep, hd); k/v: (B, S, KV, hd); length: (1,) int32.
 
@@ -65,32 +73,51 @@ def decode_attention_kernel(q, k, v, length, *, block_s: int = 512,
     """
     b, kv, rep, hd = q.shape
     s_len = k.shape[1]
-    block_s = largest_aligned_divisor(s_len, block_s, align=8)
-    n_s = s_len // block_s
+    splits = largest_aligned_divisor(s_len, max(int(splits), 1))
+    seg = s_len // splits
+    block_s = largest_aligned_divisor(seg, block_s, align=8)
+    n_s = seg // block_s
     kernel = functools.partial(_kernel, scale=hd ** -0.5, n_s=n_s,
-                               block_s=block_s)
+                               block_s=block_s, seg=seg)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,                 # `length` lands in SMEM
-        grid=(b, kv, n_s),
+        grid=(b, kv, splits, n_s),
         in_specs=[
-            pl.BlockSpec((1, 1, rep, hd), lambda b_, g, j, *_: (b_, g, 0, 0)),
+            pl.BlockSpec((1, 1, rep, hd),
+                         lambda b_, g, sp, j, *_: (b_, g, 0, 0)),
             pl.BlockSpec((1, block_s, 1, hd),
-                         lambda b_, g, j, *_: (b_, j, g, 0)),
+                         lambda b_, g, sp, j, *_: (b_, sp * n_s + j, g, 0)),
             pl.BlockSpec((1, block_s, 1, hd),
-                         lambda b_, g, j, *_: (b_, j, g, 0)),
+                         lambda b_, g, sp, j, *_: (b_, sp * n_s + j, g, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, rep, hd),
-                               lambda b_, g, j, *_: (b_, g, 0, 0)),
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, rep, hd),
+                         lambda b_, g, sp, j, *_: (b_, sp, g, 0, 0)),
+            pl.BlockSpec((1, 1, 1, rep),
+                         lambda b_, g, sp, j, *_: (b_, sp, g, 0)),
+            pl.BlockSpec((1, 1, 1, rep),
+                         lambda b_, g, sp, j, *_: (b_, sp, g, 0)),
+        ],
         scratch_shapes=[
             pltpu.VMEM((rep, hd), jnp.float32),
             pltpu.VMEM((rep,), jnp.float32),
             pltpu.VMEM((rep,), jnp.float32),
         ],
     )
-    return pl.pallas_call(
+    acc, m, l = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kv, rep, hd), jnp.float32),
-        compiler_params=grid_compiler_params(dims, 2, 1),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, splits, kv, rep, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, splits, kv, rep), jnp.float32),
+            jax.ShapeDtypeStruct((b, splits, kv, rep), jnp.float32),
+        ],
+        compiler_params=grid_compiler_params(dims, 3, 1),
         interpret=interpret,
     )(length, q, k, v)
+    # combine the per-split partials with one logsumexp rescale
+    m_tot = m.max(axis=1)                             # (b, kv, rep)
+    w = jnp.exp(m - m_tot[:, None])
+    l_tot = (l * w).sum(axis=1)
+    o = (acc * w[..., None]).sum(axis=1)
+    return o / jnp.maximum(l_tot, 1e-30)[..., None]

@@ -12,13 +12,13 @@ import jax.numpy as jnp
 from .. import resolve_launch_params
 from .kernel import decode_attention_kernel
 
-DEFAULTS = {"block_s": 512, "dims": "parallel"}
+DEFAULTS = {"block_s": 512, "splits": 1, "dims": "parallel"}
 
 
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                      length: jax.Array | int | None = None,
-                     block_s: int | None = None, dims: str | None = None,
-                     tuned: bool | None = None,
+                     block_s: int | None = None, splits: int | None = None,
+                     dims: str | None = None, tuned: bool | None = None,
                      interpret: bool | None = None) -> jax.Array:
     """q: (B, H, hd); k/v: (B, S, KV, hd). Returns (B, H, hd) fp32.
 
@@ -34,11 +34,13 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     meta = {"b": b, "kv": kv, "rep": rep, "hd": hd, "s": k.shape[1]}
     p = resolve_launch_params(
         "decode_attention", meta, q.dtype, defaults=DEFAULTS,
-        overrides={"block_s": block_s, "dims": dims}, tuned=tuned)
+        overrides={"block_s": block_s, "splits": splits, "dims": dims},
+        tuned=tuned)
     if length is None:
         length = k.shape[1]
     length = jnp.asarray(length, jnp.int32).reshape(1)
     qg = q.reshape(b, kv, rep, hd)
     out = decode_attention_kernel(qg, k, v, length, block_s=p["block_s"],
-                                  dims=p["dims"], interpret=interpret)
+                                  splits=p["splits"], dims=p["dims"],
+                                  interpret=interpret)
     return out.reshape(b, h, hd)

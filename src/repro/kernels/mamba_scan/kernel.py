@@ -1,12 +1,34 @@
-"""Mamba-1 selective scan as a fused Pallas TPU kernel.
+"""Mamba-1 selective scan as fused Pallas TPU kernels.
 
-Grid (B, dI/bd, T/L): the (bd, S) state is VMEM scratch carried across
-the innermost time-chunk dimension; each cell loads (L, bd) blocks of
-x/delta and (L, S) blocks of B/C and steps its L tokens sequentially.
-This is the CUDA selective-scan kernel's strategy mapped onto the TPU
-memory hierarchy: discretised tensors (exp(delta A) etc.) are
-rematerialised per timestep in VREGs and never touch HBM — the kernel's
-HBM traffic is exactly one read of x/delta/B/C and one write of y.
+Forward — two grid programs behind one entry point:
+
+  * **serial** (``lanes=0``): grid (B, dI/bd, T/L); the (bd, S) state is
+    VMEM scratch carried across the innermost time-chunk dimension and
+    each cell steps its L tokens sequentially.  This is the CUDA
+    selective-scan kernel's strategy mapped onto the TPU memory
+    hierarchy: discretised tensors (exp(delta A) etc.) are
+    rematerialised per timestep in VREGs and never touch HBM.
+  * **chunked** (``lanes>=2``): each cell owns a *span* of
+    ``lanes * chunk`` tokens split into ``lanes`` chunks scanned in
+    lockstep — the per-token loop runs ``chunk`` iterations with a
+    ``(lanes, bd, S)`` carry, storing each token's running decay
+    product and zero-state local scan in VMEM.  A Python-unrolled
+    ``lanes``-step combine then threads the carried span-entry state
+    through the chunk summaries (decay product, local state), and one
+    vectorised fixup ``H = H_local + P * h_chunk_start`` + output
+    contraction finishes all span tokens at once.  Identical math, but
+    the sequential depth per cell drops from ``span`` to
+    ``chunk + lanes`` — on backends where the serial loop is
+    per-iteration-overhead bound this is the win the tuner finds.
+
+Backward (``selective_scan_bwd``) is recompute-based: a light spans
+pre-pass re-derives the state at every span boundary, then a reverse
+grid sweep (span index map ``n-1-j``) calls ``jax.vjp`` on the pure
+local forward of each span with the incoming output/state cotangents —
+the input cotangents land in per-cell partial outputs (summed by the
+caller for the reduced operands a/b/c/d) and the span-entry cotangent
+becomes the carried adjoint for the previous span.  Residual memory is
+O(inputs): nothing from the forward pass is saved but the inputs.
 """
 
 from __future__ import annotations
@@ -21,8 +43,8 @@ from jax.experimental.pallas import tpu as pltpu
 from .. import grid_compiler_params, largest_aligned_divisor
 
 
-def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
-            y_ref, h_out_ref, h_ref, *, chunk, n_chunks):
+def _serial_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
+                   y_ref, h_out_ref, h_ref, *, chunk, n_chunks):
     jc = pl.program_id(2)
 
     @pl.when(jc == 0)
@@ -50,38 +72,251 @@ def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
         h_out_ref[0] = h_ref[...]
 
 
+def _chunked_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
+                    y_ref, h_out_ref, h_scr, p_scr, hl_scr,
+                    *, lanes, chunk, unroll, n_spans):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        h_scr[...] = h0_ref[0]
+
+    a = a_ref[...]                                     # (bd, S)
+    bd, s = a.shape
+    xs = x_ref[0].reshape(lanes, chunk, bd)
+    dts = dt_ref[0].reshape(lanes, chunk, bd)
+    bs = b_ref[0].reshape(lanes, chunk, s)
+    cs = c_ref[0].reshape(lanes, chunk, s)
+
+    # all `lanes` chunks scan their tokens in lockstep; P is the running
+    # in-chunk decay product, Hl the scan from a zero entry state
+    def body(tk, carry):
+        p, hl = carry                                  # (lanes, bd, S)
+        dt_t = dts[:, tk]                              # (lanes, bd)
+        da = jnp.exp(dt_t[..., None] * a[None])        # (lanes, bd, S)
+        u = (dt_t * xs[:, tk])[..., None] * bs[:, tk, None, :]
+        hl = da * hl + u
+        p = p * da
+        p_scr[:, tk] = p
+        hl_scr[:, tk] = hl
+        return p, hl
+
+    zeros = jnp.zeros((lanes, bd, s), jnp.float32)
+    p, hl = jax.lax.fori_loop(0, chunk, body, (jnp.ones_like(zeros), zeros),
+                              unroll=unroll)
+
+    # thread the carried span-entry state through the chunk summaries
+    h = h_scr[...]
+    starts = []
+    for l in range(lanes):
+        starts.append(h)
+        h = p[l] * h + hl[l]
+    h_scr[...] = h
+    hs = jnp.stack(starts, 0)                          # (lanes, bd, S)
+
+    @pl.when(j == n_spans - 1)
+    def _final():
+        h_out_ref[0] = h
+
+    # fixup every span token at once: h_t = Hl_t + P_t * h_chunk_start
+    big = hl_scr[...] + p_scr[...] * hs[:, None]
+    y = (big * cs[:, :, None, :]).sum(-1) + d_ref[...] * xs
+    y_ref[0] = y.reshape(lanes * chunk, bd)
+
+
+def _clamp_chunking(t: int, chunk: int, lanes: int) -> tuple[int, int]:
+    """Clamp (chunk, lanes) so ``chunk * lanes`` divides ``t``; lanes < 2
+    collapses to the serial path (the ``lanes=0`` sentinel)."""
+    chunk = largest_aligned_divisor(t, chunk)
+    if lanes >= 2:
+        lanes = largest_aligned_divisor(t // chunk, lanes)
+    return chunk, (lanes if lanes >= 2 else 0)
+
+
 def selective_scan_kernel(x, delta, a, b, c, d, h0, *, block_d: int = 256,
-                          chunk: int = 64, dims: str = "parallel",
-                          interpret: bool = False):
+                          chunk: int = 64, lanes: int = 0, unroll: int = 1,
+                          dims: str = "parallel", interpret: bool = False):
     """x/delta: (B,T,dI) f32; a: (dI,S); b/c: (B,T,S); d: (dI,);
-    h0: (B,dI,S).  Returns (y (B,T,dI) f32, h_T (B,dI,S) f32)."""
+    h0: (B,dI,S).  Returns (y (B,T,dI) f32, h_T (B,dI,S) f32).
+
+    ``lanes=0`` runs the serial per-token scan; ``lanes>=2`` runs the
+    chunked formulation with ``lanes`` chunks of ``chunk`` tokens per
+    grid cell (clamped to divide T).
+    """
     bt, t, di = x.shape
     s = a.shape[1]
     block_d = largest_aligned_divisor(di, block_d, align=8)
-    chunk = largest_aligned_divisor(t, chunk)
-    n_chunks = t // chunk
-    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
-    xspec = pl.BlockSpec((1, chunk, block_d), lambda b_, i, j: (b_, j, i))
-    sspec = pl.BlockSpec((1, chunk, s), lambda b_, i, j: (b_, j, 0))
+    chunk, lanes = _clamp_chunking(t, chunk, lanes)
+    span = chunk * lanes if lanes else chunk
+    n_spans = t // span
+    xspec = pl.BlockSpec((1, span, block_d), lambda b_, i, j: (b_, j, i))
+    sspec = pl.BlockSpec((1, span, s), lambda b_, i, j: (b_, j, 0))
+    hspec = pl.BlockSpec((1, block_d, s), lambda b_, i, j: (b_, i, 0))
+    if lanes:
+        kernel = functools.partial(_chunked_kernel, lanes=lanes, chunk=chunk,
+                                   unroll=max(int(unroll), 1),
+                                   n_spans=n_spans)
+        scratch = [pltpu.VMEM((block_d, s), jnp.float32),
+                   pltpu.VMEM((lanes, chunk, block_d, s), jnp.float32),
+                   pltpu.VMEM((lanes, chunk, block_d, s), jnp.float32)]
+    else:
+        kernel = functools.partial(_serial_kernel, chunk=chunk,
+                                   n_chunks=n_spans)
+        scratch = [pltpu.VMEM((block_d, s), jnp.float32)]
     return pl.pallas_call(
         kernel,
-        grid=(bt, di // block_d, n_chunks),
+        grid=(bt, di // block_d, n_spans),
         in_specs=[
             xspec, xspec,
             pl.BlockSpec((block_d, s), lambda b_, i, j: (i, 0)),
             sspec, sspec,
             pl.BlockSpec((block_d,), lambda b_, i, j: (i,)),
+            hspec,
+        ],
+        out_specs=[xspec, hspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bt, t, di), jnp.float32),
+            jax.ShapeDtypeStruct((bt, di, s), jnp.float32),
+        ],
+        scratch_shapes=scratch,
+        compiler_params=grid_compiler_params(dims, 2, 1),
+        interpret=interpret,
+    )(x, delta, a, b, c, d, h0)
+
+
+# -- backward: spans pre-pass + reverse vjp sweep -------------------------------
+
+def _spans_kernel(x_ref, dt_ref, a_ref, b_ref, h0_ref, hs_ref, h_scr,
+                  *, span):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        h_scr[...] = h0_ref[0]
+
+    hs_ref[0, 0] = h_scr[...]                     # state entering this span
+    a = a_ref[...]
+
+    def step(t, _):
+        dt_t = dt_ref[0, t]
+        da = jnp.exp(dt_t[:, None] * a)
+        h_scr[...] = (da * h_scr[...]
+                      + (dt_t * x_ref[0, t])[:, None] * b_ref[0, t][None, :])
+        return ()
+
+    jax.lax.fori_loop(0, span, step, ())
+
+
+def _local_scan(x, dt, a, b, c, d, h_in):
+    """Pure forward over one span from its entry state — the function the
+    backward cell differentiates (recompute-in-backward)."""
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[:, None] * a)
+        h = da * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y = (h * c_t[None, :]).sum(axis=1) + d * x_t
+        return h, y
+
+    h_out, y = jax.lax.scan(step, h_in, (x, dt, b, c))
+    return y, h_out
+
+
+def _scan_bwd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, hs_ref,
+                     dy_ref, dhT_ref, dx_ref, ddt_ref, da_ref, db_ref,
+                     dc_ref, dd_ref, dh0_ref, g_scr, *, n_spans):
+    jr = pl.program_id(2)                         # 0 = last span (reversed)
+
+    @pl.when(jr == 0)
+    def _init():
+        g_scr[...] = dhT_ref[0]
+
+    _, vjp = jax.vjp(_local_scan, x_ref[0], dt_ref[0], a_ref[...],
+                     b_ref[0], c_ref[0], d_ref[...], hs_ref[0, 0])
+    dx, ddt, da_p, db_p, dc_p, dd_p, dh_in = vjp((dy_ref[0], g_scr[...]))
+    dx_ref[0] = dx
+    ddt_ref[0] = ddt
+    da_ref[0, 0] = da_p                           # per-cell partials: the
+    db_ref[0, 0] = db_p                           # reduced operands are
+    dc_ref[0, 0] = dc_p                           # summed by the caller
+    dd_ref[0, 0] = dd_p
+    g_scr[...] = dh_in
+
+    @pl.when(jr == n_spans - 1)
+    def _final():
+        dh0_ref[0] = dh_in
+
+
+def selective_scan_bwd(x, delta, a, b, c, d, h0, dy, dhT, *,
+                       block_d: int = 256, chunk: int = 64,
+                       dims: str = "parallel", interpret: bool = False):
+    """Pallas backward pass: grads of (y, h_T) cotangents (dy, dhT) w.r.t.
+    every forward operand.  Returns (dx, ddelta, da, db, dc, dd, dh0)."""
+    bt, t, di = x.shape
+    s = a.shape[1]
+    block_d = largest_aligned_divisor(di, block_d, align=8)
+    chunk = largest_aligned_divisor(t, chunk)
+    n_spans = t // chunk
+    n_db = di // block_d
+    aspec = pl.BlockSpec((block_d, s), lambda b_, i, j: (i, 0))
+    dspec = pl.BlockSpec((block_d,), lambda b_, i, j: (i,))
+
+    spans = pl.pallas_call(
+        functools.partial(_spans_kernel, span=chunk),
+        grid=(bt, n_db, n_spans),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b_, i, j: (b_, j, i)),
+            pl.BlockSpec((1, chunk, block_d), lambda b_, i, j: (b_, j, i)),
+            aspec,
+            pl.BlockSpec((1, chunk, s), lambda b_, i, j: (b_, j, 0)),
+            pl.BlockSpec((1, block_d, s), lambda b_, i, j: (b_, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_d, s),
+                               lambda b_, i, j: (b_, j, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bt, n_spans, di, s), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_d, s), jnp.float32)],
+        compiler_params=grid_compiler_params(dims, 2, 1),
+        interpret=interpret,
+    )(x, delta, a, b, h0)
+
+    rev = lambda b_, i, j: (b_, n_spans - 1 - j, i)          # noqa: E731
+    xspec_r = pl.BlockSpec((1, chunk, block_d), rev)
+    sspec_r = pl.BlockSpec((1, chunk, s),
+                           lambda b_, i, j: (b_, n_spans - 1 - j, 0))
+    out = pl.pallas_call(
+        functools.partial(_scan_bwd_kernel, n_spans=n_spans),
+        grid=(bt, n_db, n_spans),
+        in_specs=[
+            xspec_r, xspec_r, aspec, sspec_r, sspec_r, dspec,
+            pl.BlockSpec((1, 1, block_d, s),
+                         lambda b_, i, j: (b_, n_spans - 1 - j, i, 0)),
+            xspec_r,
             pl.BlockSpec((1, block_d, s), lambda b_, i, j: (b_, i, 0)),
         ],
         out_specs=[
-            xspec,
+            xspec_r, xspec_r,
+            pl.BlockSpec((1, 1, block_d, s),
+                         lambda b_, i, j: (b_, n_spans - 1 - j, i, 0)),
+            pl.BlockSpec((1, 1, chunk, s),
+                         lambda b_, i, j: (i, b_, n_spans - 1 - j, 0)),
+            pl.BlockSpec((1, 1, chunk, s),
+                         lambda b_, i, j: (i, b_, n_spans - 1 - j, 0)),
+            pl.BlockSpec((1, 1, block_d),
+                         lambda b_, i, j: (b_, n_spans - 1 - j, i)),
             pl.BlockSpec((1, block_d, s), lambda b_, i, j: (b_, i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((bt, t, di), jnp.float32),
+            jax.ShapeDtypeStruct((bt, t, di), jnp.float32),
+            jax.ShapeDtypeStruct((bt, n_spans, di, s), jnp.float32),
+            jax.ShapeDtypeStruct((n_db, bt, t, s), jnp.float32),
+            jax.ShapeDtypeStruct((n_db, bt, t, s), jnp.float32),
+            jax.ShapeDtypeStruct((bt, n_spans, di), jnp.float32),
             jax.ShapeDtypeStruct((bt, di, s), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((block_d, s), jnp.float32)],
         compiler_params=grid_compiler_params(dims, 2, 1),
         interpret=interpret,
-    )(x, delta, a, b, c, d, h0)
+    )(x, delta, a, b, c, d, spans, dy, dhT)
+    dx, ddt, da_p, db_p, dc_p, dd_p, dh0 = out
+    return (dx, ddt, da_p.sum(axis=(0, 1)), db_p.sum(axis=0),
+            dc_p.sum(axis=0), dd_p.sum(axis=(0, 1)), dh0)

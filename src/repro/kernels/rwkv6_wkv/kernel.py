@@ -1,16 +1,40 @@
-"""RWKV-6 wkv recurrence as a chunked Pallas TPU kernel.
+"""RWKV-6 wkv recurrence as chunked Pallas TPU kernels.
 
-Grid (B, H, T/L): the (hd x hd) per-head state lives in VMEM scratch and
-is carried across the innermost (time-chunk) grid dimension; each cell
-loads an (L, hd) block of r/k/v/w and steps through its L tokens with a
-``fori_loop``.  Keeping the state resident in VMEM is the entire point —
-the HBM traffic is exactly one read of r/k/v/w and one write of y
-(the CUDA wkv kernel's shared-memory strategy, translated to the TPU
-memory hierarchy).
+Forward — two grid programs behind one entry point, both keeping the
+(hd x hd) per-head state resident in VMEM scratch carried across the
+innermost (time) grid dimension (the CUDA wkv kernel's shared-memory
+strategy translated to the TPU memory hierarchy — HBM traffic is one
+read of r/k/v/w and one write of y):
 
-State is read out per chunk into the ``s_out`` block so callers can both
-resume (decode) and checkpoint the recurrence at chunk boundaries
-(matching the chunked-remat training layout in models/rwkv6.py).
+  * **serial** (``lanes=0``): grid (B, H/bh, T/L); each cell loads an
+    (L, bh, hd) block of r/k/v/w and steps through its L tokens with a
+    ``fori_loop``, ``block_h`` heads vectorised per cell.
+  * **chunked matrix form** (``lanes>=2``): each cell owns
+    ``lanes * chunk`` tokens.  With ``g = cumsum(log w)`` inside a
+    chunk, the intra-chunk contribution is a masked (chunk x chunk)
+    score GEMM between ``r * exp(g_excl)`` and ``k * exp(-g)``, the
+    cross-chunk contribution is one GEMM against the chunk-entry state,
+    and per-chunk summaries (total decay ``exp(g_last)``, local state
+    from safe ratios ``exp(g_last - g) <= 1``) thread the carried state
+    through a Python-unrolled ``lanes``-step combine.  No token loop at
+    all — the sequential depth per cell is ``lanes``, and the work is
+    MXU-shaped.  ``exp(-g)`` bounds chunk length: ``validate`` caps
+    matrix-form chunks at 64 and the tuner's parity gate rejects any
+    configuration that overflows on the tuning inputs (trained RWKV
+    decays sit near 1; adversarially small ``w`` should stay on the
+    serial path).
+
+Backward (``wkv6_bwd``) is recompute-based: a spans pre-pass re-derives
+the state at every span boundary, then a reverse grid sweep calls
+``jax.vjp`` on the pure local recurrence of each span (loop form —
+decays are only ever multiplied, so it is unconditionally stable) with
+the incoming output/state cotangents; per-cell partials for the shared
+``u`` are summed by the caller and the span-entry cotangent becomes the
+carried adjoint.  Residual memory is O(inputs).
+
+State is read out per cell into ``s_out`` so callers can both resume
+(decode) and checkpoint the recurrence (matching the chunked-remat
+training layout in models/rwkv6.py).
 """
 
 from __future__ import annotations
@@ -25,63 +49,249 @@ from jax.experimental.pallas import tpu as pltpu
 from .. import grid_compiler_params, largest_aligned_divisor
 
 
-def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, s_out_ref,
-            s_ref, *, chunk, n_chunks):
+def _serial_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref,
+                   s_out_ref, s_ref, *, chunk, n_chunks):
     jc = pl.program_id(2)
 
     @pl.when(jc == 0)
     def _init():
-        s_ref[...] = s0_ref[0, 0]
+        s_ref[...] = s0_ref[0]
 
-    u = u_ref[0]                                   # (hd,)
+    u = u_ref[...]                                 # (bh, hd)
 
     def step(t, _):
-        r_t = r_ref[0, t, 0]                       # (hd,)
-        k_t = k_ref[0, t, 0]
-        v_t = v_ref[0, t, 0]
-        w_t = w_ref[0, t, 0]
-        s = s_ref[...]                             # (hd, hd) key x value
-        kv = k_t[:, None] * v_t[None, :]
-        y = ((s + u[:, None] * kv) * r_t[:, None]).sum(axis=0)
-        y_ref[0, t, 0] = y.astype(y_ref.dtype)
-        s_ref[...] = w_t[:, None] * s + kv
+        r_t = r_ref[0, t]                          # (bh, hd)
+        k_t = k_ref[0, t]
+        v_t = v_ref[0, t]
+        w_t = w_ref[0, t]
+        s = s_ref[...]                             # (bh, hd, hd) key x value
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = ((s + u[..., :, None] * kv) * r_t[..., :, None]).sum(axis=-2)
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        s_ref[...] = w_t[..., :, None] * s + kv
         return ()
 
     jax.lax.fori_loop(0, chunk, step, ())
 
     @pl.when(jc == n_chunks - 1)
     def _final():
-        s_out_ref[0, 0] = s_ref[...]
+        s_out_ref[0] = s_ref[...]
 
 
-def wkv6_kernel(r, k, v, w, u, s0, *, chunk: int = 64,
-                dims: str = "parallel", interpret: bool = False):
+def _chunked_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref,
+                    s_out_ref, s_scr, *, lanes, chunk, block_h, n_spans):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        s_scr[...] = s0_ref[0]
+
+    hd = u_ref.shape[1]
+    u = u_ref[...]                                   # (bh, hd)
+    rs = r_ref[0].reshape(lanes, chunk, block_h, hd)
+    ks = k_ref[0].reshape(lanes, chunk, block_h, hd)
+    vs = v_ref[0].reshape(lanes, chunk, block_h, hd)
+    ws = w_ref[0].reshape(lanes, chunk, block_h, hd)
+
+    logw = jnp.log(ws)
+    tril = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+    g = jnp.einsum("ti,libd->ltbd", tril, logw)      # inclusive cumsum
+    g_excl = g - logw
+    aa = rs * jnp.exp(g_excl)                        # (lanes, L, bh, hd)
+    bb = ks * jnp.exp(-g)
+    scores = jnp.einsum("ltbd,libd->lbti", aa, bb)
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+    y_intra = jnp.einsum("lbti,libj->ltbj", scores * mask, vs)
+    bonus = (rs * u * ks).sum(-1)[..., None] * vs
+    # per-chunk summaries: total decay + local state via safe ratios <= 1
+    g_last = g[:, -1:]                               # (lanes, 1, bh, hd)
+    cc = ks * jnp.exp(g_last - g)
+    s_loc = jnp.einsum("libd,libj->lbdj", cc, vs)    # (lanes, bh, hd, hd)
+    d_tot = jnp.exp(g_last[:, 0])                    # (lanes, bh, hd)
+
+    s = s_scr[...]
+    starts = []
+    for l in range(lanes):
+        starts.append(s)
+        s = d_tot[l][..., :, None] * s + s_loc[l]
+    s_scr[...] = s
+    s_start = jnp.stack(starts, 0)                   # (lanes, bh, hd, hd)
+
+    @pl.when(j == n_spans - 1)
+    def _final():
+        s_out_ref[0] = s
+
+    y_inter = jnp.einsum("ltbd,lbdj->ltbj", aa, s_start)
+    y = y_intra + y_inter + bonus
+    y_ref[0] = y.reshape(lanes * chunk, block_h, hd)
+
+
+def _clamp_chunking(t: int, chunk: int, lanes: int) -> tuple[int, int]:
+    chunk = largest_aligned_divisor(t, chunk)
+    if lanes >= 2:
+        lanes = largest_aligned_divisor(t // chunk, lanes)
+    return chunk, (lanes if lanes >= 2 else 0)
+
+
+def wkv6_kernel(r, k, v, w, u, s0, *, chunk: int = 64, lanes: int = 0,
+                block_h: int = 1, dims: str = "parallel",
+                interpret: bool = False):
     """r,k,v,w: (B, T, H, hd) f32; u: (H, hd); s0: (B, H, hd, hd).
 
-    Returns (y (B,T,H,hd) f32, s_T (B,H,hd,hd) f32).
+    Returns (y (B,T,H,hd) f32, s_T (B,H,hd,hd) f32).  ``lanes=0`` runs
+    the serial per-token scan; ``lanes>=2`` the matrix-form chunked
+    formulation (``lanes`` chunks of ``chunk`` tokens per grid cell).
     """
     b, t, h, hd = r.shape
-    chunk = largest_aligned_divisor(t, chunk)
-    n_chunks = t // chunk
-    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
-    seq_spec = pl.BlockSpec((1, chunk, 1, hd), lambda b_, h_, j: (b_, j, h_, 0))
+    block_h = largest_aligned_divisor(h, block_h)
+    chunk, lanes = _clamp_chunking(t, chunk, lanes)
+    span = chunk * lanes if lanes else chunk
+    n_spans = t // span
+    seq_spec = pl.BlockSpec((1, span, block_h, hd),
+                            lambda b_, h_, j: (b_, j, h_, 0))
+    sspec = pl.BlockSpec((1, block_h, hd, hd),
+                         lambda b_, h_, j: (b_, h_, 0, 0))
+    if lanes:
+        kernel = functools.partial(_chunked_kernel, lanes=lanes, chunk=chunk,
+                                   block_h=block_h, n_spans=n_spans)
+    else:
+        kernel = functools.partial(_serial_kernel, chunk=chunk,
+                                   n_chunks=n_spans)
     return pl.pallas_call(
         kernel,
-        grid=(b, h, n_chunks),
+        grid=(b, h // block_h, n_spans),
         in_specs=[
             seq_spec, seq_spec, seq_spec, seq_spec,
-            pl.BlockSpec((1, hd), lambda b_, h_, j: (h_, 0)),
-            pl.BlockSpec((1, 1, hd, hd), lambda b_, h_, j: (b_, h_, 0, 0)),
+            pl.BlockSpec((block_h, hd), lambda b_, h_, j: (h_, 0)),
+            sspec,
         ],
-        out_specs=[
-            seq_spec,
-            pl.BlockSpec((1, 1, hd, hd), lambda b_, h_, j: (b_, h_, 0, 0)),
-        ],
+        out_specs=[seq_spec, sspec],
         out_shape=[
             jax.ShapeDtypeStruct((b, t, h, hd), jnp.float32),
             jax.ShapeDtypeStruct((b, h, hd, hd), jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((block_h, hd, hd), jnp.float32)],
         compiler_params=grid_compiler_params(dims, 2, 1),
         interpret=interpret,
     )(r, k, v, w, u, s0)
+
+
+# -- backward: spans pre-pass + reverse vjp sweep -------------------------------
+
+def _spans_kernel(k_ref, v_ref, w_ref, s0_ref, ss_ref, s_scr, *, span):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        s_scr[...] = s0_ref[0]
+
+    ss_ref[0, 0] = s_scr[...]                     # state entering this span
+
+    def step(t, _):
+        k_t = k_ref[0, t]
+        v_t = v_ref[0, t]
+        w_t = w_ref[0, t]
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        s_scr[...] = w_t[..., :, None] * s_scr[...] + kv
+        return ()
+
+    jax.lax.fori_loop(0, span, step, ())
+
+
+def _local_wkv(r, k, v, w, u, s_in):
+    """Pure forward over one span from its entry state — the function the
+    backward cell differentiates (recompute-in-backward).  Loop form:
+    decays are only multiplied, never inverted, so it is stable for any
+    ``w`` in (0, 1)."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = ((s + u[..., :, None] * kv) * r_t[..., :, None]).sum(axis=-2)
+        return w_t[..., :, None] * s + kv, y
+
+    s_out, y = jax.lax.scan(step, s_in, (r, k, v, w))
+    return y, s_out
+
+
+def _wkv_bwd_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, ss_ref, dy_ref,
+                    dsT_ref, dr_ref, dk_ref, dv_ref, dw_ref, du_ref,
+                    ds0_ref, g_scr, *, n_spans):
+    jr = pl.program_id(2)                         # 0 = last span (reversed)
+
+    @pl.when(jr == 0)
+    def _init():
+        g_scr[...] = dsT_ref[0]
+
+    _, vjp = jax.vjp(_local_wkv, r_ref[0], k_ref[0], v_ref[0], w_ref[0],
+                     u_ref[...], ss_ref[0, 0])
+    dr, dk, dv, dw, du_p, ds_in = vjp((dy_ref[0], g_scr[...]))
+    dr_ref[0] = dr
+    dk_ref[0] = dk
+    dv_ref[0] = dv
+    dw_ref[0] = dw
+    du_ref[0, 0] = du_p                           # per-cell partial: summed
+    g_scr[...] = ds_in                            # by the caller
+
+    @pl.when(jr == n_spans - 1)
+    def _final():
+        ds0_ref[0] = ds_in
+
+
+def wkv6_bwd(r, k, v, w, u, s0, dy, dsT, *, chunk: int = 64,
+             block_h: int = 1, dims: str = "parallel",
+             interpret: bool = False):
+    """Pallas backward pass: grads of (y, s_T) cotangents (dy, dsT) w.r.t.
+    every forward operand.  Returns (dr, dk, dv, dw, du, ds0)."""
+    b, t, h, hd = r.shape
+    block_h = largest_aligned_divisor(h, block_h)
+    chunk = largest_aligned_divisor(t, chunk)
+    n_spans = t // chunk
+    seq = pl.BlockSpec((1, chunk, block_h, hd),
+                       lambda b_, h_, j: (b_, j, h_, 0))
+    sspec = pl.BlockSpec((1, block_h, hd, hd),
+                         lambda b_, h_, j: (b_, h_, 0, 0))
+    uspec = pl.BlockSpec((block_h, hd), lambda b_, h_, j: (h_, 0))
+
+    spans = pl.pallas_call(
+        functools.partial(_spans_kernel, span=chunk),
+        grid=(b, h // block_h, n_spans),
+        in_specs=[seq, seq, seq, sspec],
+        out_specs=pl.BlockSpec((1, 1, block_h, hd, hd),
+                               lambda b_, h_, j: (b_, j, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_spans, h, hd, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_h, hd, hd), jnp.float32)],
+        compiler_params=grid_compiler_params(dims, 2, 1),
+        interpret=interpret,
+    )(k, v, w, s0)
+
+    seq_r = pl.BlockSpec((1, chunk, block_h, hd),
+                         lambda b_, h_, j: (b_, n_spans - 1 - j, h_, 0))
+    out = pl.pallas_call(
+        functools.partial(_wkv_bwd_kernel, n_spans=n_spans),
+        grid=(b, h // block_h, n_spans),
+        in_specs=[
+            seq_r, seq_r, seq_r, seq_r, uspec,
+            pl.BlockSpec((1, 1, block_h, hd, hd),
+                         lambda b_, h_, j: (b_, n_spans - 1 - j, h_, 0, 0)),
+            seq_r, sspec,
+        ],
+        out_specs=[
+            seq_r, seq_r, seq_r, seq_r,
+            pl.BlockSpec((1, 1, block_h, hd),
+                         lambda b_, h_, j: (b_, n_spans - 1 - j, h_, 0)),
+            sspec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, h, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, t, h, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, t, h, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, t, h, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_spans, h, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_h, hd, hd), jnp.float32)],
+        compiler_params=grid_compiler_params(dims, 2, 1),
+        interpret=interpret,
+    )(r, k, v, w, u, spans, dy, dsT)
+    dr, dk, dv, dw, du_p, ds0 = out
+    return dr, dk, dv, dw, du_p.sum(axis=(0, 1)), ds0

@@ -1,13 +1,15 @@
 """Jit'd wrapper for the wkv6 kernel, differentiable via custom_vjp.
 
-Forward runs the Pallas kernel (state resident in VMEM).  Backward
-recomputes through the reference recurrence with ``jax.vjp`` — state
-recurrences keep O(T) residuals otherwise; recompute-in-backward is the
-standard training strategy for linear-attention kernels (upstream code
-additionally chunk-remats, bounding the recompute window).
-
-Launch parameters (``chunk``/``dims``) resolve defaults < tuned store
-(``tuned=``, see ``repro.tune.kernels``) < explicit overrides.
+Forward and backward are *separately tunable* Pallas launches: the
+forward resolves ``rwkv6_wkv`` launch parameters
+(``chunk``/``lanes``/``block_h``/``dims``), the backward resolves
+``rwkv6_wkv_bwd`` (``chunk``/``block_h``/``dims``) for the same shape —
+both as defaults < tuned store (``tuned=``, see ``repro.tune.kernels``)
+< explicit overrides, at trace time.  The backward recomputes
+span-boundary states and runs a reverse Pallas sweep (state recurrences
+keep O(T) residuals otherwise; recompute-in-backward is the standard
+training strategy for linear-attention kernels), so ``jax.grad``
+through ``models/rwkv6.py`` stays on tuned kernels end to end.
 """
 
 from __future__ import annotations
@@ -18,41 +20,44 @@ import jax
 import jax.numpy as jnp
 
 from .. import resolve_launch_params
-from .kernel import wkv6_kernel
-from .ref import wkv6_ref
+from .kernel import wkv6_bwd, wkv6_kernel
 
-DEFAULTS = {"chunk": 64, "dims": "parallel"}
+DEFAULTS = {"chunk": 64, "lanes": 0, "block_h": 1, "dims": "parallel"}
+BWD_DEFAULTS = {"chunk": 64, "block_h": 1, "dims": "parallel"}
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
-def _wkv(r, k, v, w, u, s0, chunk, dims, interpret):
-    return wkv6_kernel(r, k, v, w, u, s0, chunk=chunk, dims=dims,
+def _wkv(r, k, v, w, u, s0, fwd_params, bwd_params, interpret):
+    return wkv6_kernel(r, k, v, w, u, s0, **dict(fwd_params),
                        interpret=interpret)
 
 
-def _wkv_fwd(r, k, v, w, u, s0, chunk, dims, interpret):
-    out = wkv6_kernel(r, k, v, w, u, s0, chunk=chunk, dims=dims,
+def _wkv_fwd(r, k, v, w, u, s0, fwd_params, bwd_params, interpret):
+    out = wkv6_kernel(r, k, v, w, u, s0, **dict(fwd_params),
                       interpret=interpret)
     return out, (r, k, v, w, u, s0)
 
 
-def _wkv_bwd(chunk, dims, interpret, res, cts):
+def _wkv_bwd(fwd_params, bwd_params, interpret, res, cts):
     r, k, v, w, u, s0 = res
-    _, vjp = jax.vjp(lambda *a: wkv6_ref(*a), r, k, v, w, u, s0)
-    return vjp(cts)
+    dy, dsT = cts
+    return wkv6_bwd(r, k, v, w, u, s0, dy, dsT, **dict(bwd_params),
+                    interpret=interpret)
 
 
 _wkv.defvjp(_wkv_fwd, _wkv_bwd)
 
 
 def wkv6(r, k, v, w, u, s0=None, *, chunk: int | None = None,
+         lanes: int | None = None, block_h: int | None = None,
          dims: str | None = None, tuned: bool | None = None,
          interpret: bool | None = None):
     """r,k,v,w: (B,T,H,hd) f32; u: (H,hd). Returns (y, s_T). Differentiable.
 
-    ``tuned=True`` resolves the cached best launch parameters for this
-    (shape, dtype, backend) at trace time; ``tuned=None`` does so only
-    when tuning was enabled globally (``repro.tune.kernels.configure``).
+    ``tuned=True`` resolves the cached best launch parameters — forward
+    and backward independently — for this (shape, dtype, backend) at
+    trace time; ``tuned=None`` does so only when tuning was enabled
+    globally (``repro.tune.kernels.configure``).
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
@@ -60,9 +65,15 @@ def wkv6(r, k, v, w, u, s0=None, *, chunk: int | None = None,
     meta = {"b": b, "t": t, "h": h, "hd": hd}
     p = resolve_launch_params(
         "rwkv6_wkv", meta, jnp.float32, defaults=DEFAULTS,
-        overrides={"chunk": chunk, "dims": dims}, tuned=tuned)
+        overrides={"chunk": chunk, "lanes": lanes, "block_h": block_h,
+                   "dims": dims},
+        tuned=tuned)
+    pb = resolve_launch_params(
+        "rwkv6_wkv_bwd", meta, jnp.float32, defaults=BWD_DEFAULTS,
+        tuned=tuned)
     if s0 is None:
         s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
     return _wkv(r.astype(jnp.float32), k.astype(jnp.float32),
                 v.astype(jnp.float32), w.astype(jnp.float32),
-                u.astype(jnp.float32), s0, p["chunk"], p["dims"], interpret)
+                u.astype(jnp.float32), s0, tuple(sorted(p.items())),
+                tuple(sorted(pb.items())), interpret)

@@ -92,7 +92,10 @@ def apply_mamba(p: Params, x: jax.Array, cfg: ArchConfig,
     if cfg.attn_impl == "pallas":
         from ..kernels.mamba_scan import ops as ms_ops
         # tuned=None: cached best launch params when kernel tuning is
-        # enabled (repro.tune.kernels.configure), defaults otherwise
+        # enabled (repro.tune.kernels.configure), defaults otherwise.
+        # The op carries a Pallas custom_vjp, so jax.grad through this
+        # path runs tuned forward AND backward kernels (the backward
+        # resolves its own "mamba_scan_bwd" launch parameters).
         y, h_final = ms_ops.selective_scan(
             xf, delta, a, b_ssm, c_ssm, p["D"], tuned=None)
         y = y.astype(dtc) * jax.nn.silu(z)

@@ -140,6 +140,9 @@ def apply_rwkv_tmix(p: Params, x: jax.Array, cfg: ArchConfig,
     if cfg.attn_impl == "pallas":
         from ..kernels.rwkv6_wkv import ops as wkv_ops
         s0 = state["wkv"] if state is not None else None
+        # tuned=None resolves cached launch params when tuning is
+        # enabled; the op's Pallas custom_vjp means jax.grad here runs
+        # tuned forward AND backward kernels ("rwkv6_wkv_bwd" space).
         y, s_t = wkv_ops.wkv6(r.astype(jnp.float32), k.astype(jnp.float32),
                               v.astype(jnp.float32), w, p["u"], s0,
                               tuned=None)

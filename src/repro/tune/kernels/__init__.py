@@ -82,6 +82,14 @@ def resolve_config(kernel: str, meta: Mapping[str, Any], dtype: Any) -> dict:
     Pure lookup — zero measurements.  Returns ``{}`` when no store is
     configured, the kernel is unregistered, or the store has no entry
     for this workload signature (the caller keeps its defaults).
+
+    The store key already hashes the space fingerprint (param names,
+    domains, ordinality), so editing a kernel's :class:`ConfigSpace` in
+    ``specs.py`` invalidates every record tuned against the old space —
+    a stale winner can never be served to a redefined kernel.  As a
+    second line of defense (hand-edited stores, renamed launch params),
+    a resolved config must still be a valid point of the *current*
+    space for this shape, else it is dropped and the defaults win.
     """
     store = _state["store"]
     if store is None:
@@ -101,5 +109,15 @@ def resolve_config(kernel: str, meta: Mapping[str, Any], dtype: Any) -> dict:
             space = spec.space(meta)
             rec = store.best_record(space, kernel_workload(kernel, meta,
                                                            dtype))
-            cache[key] = dict(rec.best_config) if rec is not None else {}
+            cfg = dict(rec.best_config) if rec is not None else {}
+            if cfg:
+                try:
+                    space.validate(cfg)
+                    stale = spec.validate(cfg, meta)
+                except (KeyError, ValueError):
+                    cfg = {}
+                else:
+                    if stale is not None:
+                        cfg = {}
+            cache[key] = cfg
     return cache[key]

@@ -1,18 +1,28 @@
-"""Launch-parameter spaces for the five Pallas kernels.
+"""Launch-parameter spaces for the Pallas kernel suite (fwd and bwd).
 
 Candidate values are shape-independent power-of-two ladders — the same
 space structure the paper tunes over (Table I lists raw combinations;
 invalid rows are never measured).  Validity is checked per shape:
 blocks must divide their extent, chunked passes must nest, and the
-per-cell VMEM footprint (blocks + scratch, with a 2x double-buffering
-factor) must fit the ~16 MiB budget.  ``dims`` is the grid-layout
-variant: whether the non-carry grid dimensions are declared
-``"parallel"`` (Mosaic may reorder/parallelize) or ``"arbitrary"``
-(strict loop nest).
+per-cell VMEM footprint must fit the ~16 MiB budget (pipelined
+input/output blocks count twice for double buffering; scratch is
+allocated once).  ``dims`` is the grid-layout variant: whether the
+non-carry grid dimensions are declared ``"parallel"`` (Mosaic may
+reorder/parallelize) or ``"arbitrary"`` (strict loop nest).
+
+The scan kernels (``mamba_scan``, ``rwkv6_wkv``) expose a ``lanes``
+parameter selecting between the serial per-token grid program
+(``lanes=0`` — the hardcoded default, so the bench baseline stays the
+serial-scan default) and the chunked parallel-scan formulation
+(``lanes >= 2`` chunks scanned per grid cell; see each ``kernel.py``).
+Their backward passes are registered as separate ``*_bwd`` spaces over
+the same shape metas, so the ``tuned=`` path resolves forward and
+backward launch parameters independently for one workload family.
 
 Every spec's ``run`` drives the kernel directly with explicit launch
 parameters (never through the ``tuned=`` resolution path), and ``ref``
-is the kernel's ``ref.py`` oracle.
+is the kernel's ``ref.py`` oracle (for ``*_bwd`` specs: ``jax.vjp`` of
+that oracle with the same cotangents).
 """
 
 from __future__ import annotations
@@ -21,18 +31,21 @@ from typing import Any, Mapping
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from ...core.space import ConfigSpace, Param
 from .evaluate import VMEM_BUDGET_BYTES
 from .registry import KernelSpec, register_kernel
 
-__all__ = ["BLOCKS", "CHUNKS", "DIMS"]
+__all__ = ["BLOCKS", "CHUNKS", "DIMS", "LANES", "SPLITS"]
 
 BLOCKS = (8, 16, 32, 64, 128, 256, 512, 1024)
 CHUNKS = (8, 16, 32, 64, 128, 256, 512, 1024)
 TEXT_CHUNKS = (256, 512, 1024, 2048, 4096, 8192, 16384, 32768, 65536, 131072)
 DIMS = ("parallel", "arbitrary")
+LANES = (0, 4, 8, 16)          # 0 = serial grid program (the default)
+SPLITS = (1, 2, 4, 8)
 
 
 def _f32(n: int) -> int:
@@ -47,9 +60,16 @@ def _divides(extent: int, block: int, name: str) -> str | None:
     return None
 
 
-def _vmem(n_bytes: int) -> str | None:
-    if 2 * n_bytes > VMEM_BUDGET_BYTES:    # 2x: double-buffered pipeline
-        return f"VMEM overflow: ~{2 * n_bytes >> 20} MiB per grid cell"
+def _vmem(block_bytes: int, scratch_bytes: int = 0) -> str | None:
+    """Per-cell VMEM estimate.
+
+    Pipelined input/output blocks are double buffered (2x); scratch
+    buffers are allocated once for the whole grid, so counting them
+    twice would wrongly reject large-scratch chunked configurations.
+    """
+    total = 2 * block_bytes + scratch_bytes
+    if total > VMEM_BUDGET_BYTES:
+        return f"VMEM overflow: ~{total >> 20} MiB per grid cell"
     return None
 
 
@@ -112,14 +132,20 @@ register_kernel(KernelSpec(
 def _da_space(meta: Mapping[str, Any]) -> ConfigSpace:
     return ConfigSpace([
         Param("block_s", (64, 128, 256, 512, 1024, 2048, 4096, 8192)),
+        Param("splits", SPLITS),
         Param("dims", DIMS, ordinal=False),
     ])
 
 
 def _da_validate(cfg, meta) -> str | None:
-    bs, hd, rep = cfg["block_s"], meta["hd"], meta["rep"]
-    return (_divides(meta["s"], bs, "block_s")
-            or _vmem(_f32(2 * bs * hd + 2 * rep * hd + 2 * rep)))
+    bs, sp = cfg["block_s"], cfg["splits"]
+    hd, rep = meta["hd"], meta["rep"]
+    err = _divides(meta["s"], sp, "splits")
+    if err:
+        return err
+    return (_divides(meta["s"] // sp, bs, "block_s")
+            or _vmem(_f32(2 * bs * hd + 2 * rep * hd + 2 * rep),
+                     _f32(rep * hd + 2 * rep)))
 
 
 def _da_inputs(meta, dtype, rng):
@@ -135,7 +161,8 @@ def _da_run(cfg, inputs, interpret):
 
     q, k, v, length = inputs
     return decode_attention_kernel(q, k, v, length, block_s=cfg["block_s"],
-                                   dims=cfg["dims"], interpret=interpret)
+                                   splits=cfg["splits"], dims=cfg["dims"],
+                                   interpret=interpret)
 
 
 def _da_ref(inputs):
@@ -150,7 +177,7 @@ def _da_ref(inputs):
 
 register_kernel(KernelSpec(
     name="decode_attention",
-    defaults={"block_s": 512, "dims": "parallel"},
+    defaults={"block_s": 512, "splits": 1, "dims": "parallel"},
     space_fn=_da_space, validate_fn=_da_validate,
     make_inputs=_da_inputs, run=_da_run, ref=_da_ref,
     default_shape={"b": 2, "kv": 2, "rep": 4, "hd": 64, "s": 4096},
@@ -165,15 +192,28 @@ def _ms_space(meta: Mapping[str, Any]) -> ConfigSpace:
     return ConfigSpace([
         Param("block_d", BLOCKS),
         Param("chunk", CHUNKS),
+        Param("lanes", LANES),
+        Param("unroll", (1, 4)),
         Param("dims", DIMS, ordinal=False),
     ])
 
 
 def _ms_validate(cfg, meta) -> str | None:
-    bd, chunk, s = cfg["block_d"], cfg["chunk"], meta["s"]
-    return (_divides(meta["di"], bd, "block_d")
-            or _divides(meta["t"], chunk, "chunk")
-            or _vmem(_f32(3 * chunk * bd + 4 * bd * s + 2 * chunk * s + bd)))
+    bd, chunk, lanes = cfg["block_d"], cfg["chunk"], cfg["lanes"]
+    t, s = meta["t"], meta["s"]
+    err = (_divides(meta["di"], bd, "block_d")
+           or _divides(t, chunk, "chunk"))
+    if err:
+        return err
+    if lanes == 0:           # serial grid program
+        return _vmem(_f32(3 * chunk * bd + 4 * bd * s + 2 * chunk * s + bd),
+                     _f32(bd * s))
+    span = chunk * lanes
+    if t % span:
+        return f"span chunk*lanes={span} does not divide t={t}"
+    # the chunked cell stores per-token (P, Hl) scans for every lane
+    return _vmem(_f32(3 * span * bd + 4 * bd * s + 2 * span * s + bd),
+                 _f32((2 * lanes * chunk + 1) * bd * s))
 
 
 def _ms_inputs(meta, dtype, rng):
@@ -193,7 +233,8 @@ def _ms_run(cfg, inputs, interpret):
     from ...kernels.mamba_scan.kernel import selective_scan_kernel
 
     return selective_scan_kernel(*inputs, block_d=cfg["block_d"],
-                                 chunk=cfg["chunk"], dims=cfg["dims"],
+                                 chunk=cfg["chunk"], lanes=cfg["lanes"],
+                                 unroll=cfg["unroll"], dims=cfg["dims"],
                                  interpret=interpret)
 
 
@@ -205,9 +246,66 @@ def _ms_ref(inputs):
 
 register_kernel(KernelSpec(
     name="mamba_scan",
-    defaults={"block_d": 256, "chunk": 64, "dims": "parallel"},
+    defaults={"block_d": 256, "chunk": 64, "lanes": 0, "unroll": 1,
+              "dims": "parallel"},
     space_fn=_ms_space, validate_fn=_ms_validate,
     make_inputs=_ms_inputs, run=_ms_run, ref=_ms_ref,
+    default_shape={"bt": 2, "t": 512, "di": 512, "s": 8},
+    smoke_shape={"bt": 1, "t": 64, "di": 64, "s": 4},
+    atol=2e-4, rtol=2e-3,
+))
+
+
+# -- mamba selective scan: backward ---------------------------------------------
+
+def _msb_space(meta: Mapping[str, Any]) -> ConfigSpace:
+    return ConfigSpace([
+        Param("block_d", BLOCKS),
+        Param("chunk", CHUNKS),
+        Param("dims", DIMS, ordinal=False),
+    ])
+
+
+def _msb_validate(cfg, meta) -> str | None:
+    bd, chunk, s = cfg["block_d"], cfg["chunk"], meta["s"]
+    # the reverse cell re-traces the span forward under jax.vjp; the
+    # stacked per-token residuals (decay products + states) dominate
+    return (_divides(meta["di"], bd, "block_d")
+            or _divides(meta["t"], chunk, "chunk")
+            or _vmem(_f32(7 * chunk * bd + 6 * chunk * s + 4 * bd * s
+                          + 2 * bd),
+                     _f32(3 * chunk * bd * s + bd * s)))
+
+
+def _msb_inputs(meta, dtype, rng):
+    inputs = _ms_inputs(meta, dtype, rng)
+    bt, t, di, s = (meta[k] for k in ("bt", "t", "di", "s"))
+    dy = jnp.asarray(rng.standard_normal((bt, t, di)), jnp.float32)
+    dh = jnp.asarray(rng.standard_normal((bt, di, s)), jnp.float32)
+    return inputs + (dy, dh)
+
+
+def _msb_run(cfg, inputs, interpret):
+    from ...kernels.mamba_scan.kernel import selective_scan_bwd
+
+    return selective_scan_bwd(*inputs, block_d=cfg["block_d"],
+                              chunk=cfg["chunk"], dims=cfg["dims"],
+                              interpret=interpret)
+
+
+def _msb_ref(inputs):
+    from ...kernels.mamba_scan.ref import selective_scan_ref
+
+    *primals, dy, dh = inputs
+    _, vjp = jax.vjp(lambda *args: selective_scan_ref(*args), *primals)
+    return vjp((dy, dh))
+
+
+register_kernel(KernelSpec(
+    name="mamba_scan_bwd",
+    defaults={"block_d": 256, "chunk": 64, "dims": "parallel"},
+    space_fn=_msb_space, validate_fn=_msb_validate,
+    make_inputs=_msb_inputs, run=_msb_run, ref=_msb_ref,
     default_shape={"bt": 2, "t": 512, "di": 512, "s": 8},
     smoke_shape={"bt": 1, "t": 64, "di": 64, "s": 4},
     atol=2e-4, rtol=2e-3,
@@ -219,14 +317,34 @@ register_kernel(KernelSpec(
 def _wkv_space(meta: Mapping[str, Any]) -> ConfigSpace:
     return ConfigSpace([
         Param("chunk", CHUNKS),
+        Param("lanes", (0, 2, 4, 8)),
+        Param("block_h", (1, 2, 4)),
         Param("dims", DIMS, ordinal=False),
     ])
 
 
 def _wkv_validate(cfg, meta) -> str | None:
-    chunk, hd = cfg["chunk"], meta["hd"]
-    return (_divides(meta["t"], chunk, "chunk")
-            or _vmem(_f32(5 * chunk * hd + hd + 3 * hd * hd)))
+    chunk, lanes, bh = cfg["chunk"], cfg["lanes"], cfg["block_h"]
+    t, hd = meta["t"], meta["hd"]
+    err = (_divides(t, chunk, "chunk")
+           or _divides(meta["h"], bh, "block_h"))
+    if err:
+        return err
+    if lanes == 0:           # serial grid program
+        return _vmem(_f32(5 * chunk * bh * hd + bh * hd),
+                     _f32(3 * bh * hd * hd))
+    span = chunk * lanes
+    if t % span:
+        return f"span chunk*lanes={span} does not divide t={t}"
+    if chunk > 64:
+        # the matrix form computes k * exp(-cumsum(log w)); past ~64
+        # tokens the inverse decay product can overflow f32 (the
+        # tuner's parity gate also rejects any config that diverges)
+        return f"chunk={chunk} exceeds matrix-form stability cap 64"
+    # intra-chunk scores (chunk x chunk) per lane plus chunk temporaries
+    return _vmem(_f32(5 * span * bh * hd + bh * hd),
+                 _f32(lanes * bh * (chunk * chunk + 6 * chunk * hd)
+                      + 3 * bh * hd * hd))
 
 
 def _wkv_inputs(meta, dtype, rng):
@@ -244,7 +362,8 @@ def _wkv_inputs(meta, dtype, rng):
 def _wkv_run(cfg, inputs, interpret):
     from ...kernels.rwkv6_wkv.kernel import wkv6_kernel
 
-    return wkv6_kernel(*inputs, chunk=cfg["chunk"], dims=cfg["dims"],
+    return wkv6_kernel(*inputs, chunk=cfg["chunk"], lanes=cfg["lanes"],
+                       block_h=cfg["block_h"], dims=cfg["dims"],
                        interpret=interpret)
 
 
@@ -257,9 +376,63 @@ def _wkv_ref(inputs):
 
 register_kernel(KernelSpec(
     name="rwkv6_wkv",
-    defaults={"chunk": 64, "dims": "parallel"},
+    defaults={"chunk": 64, "lanes": 0, "block_h": 1, "dims": "parallel"},
     space_fn=_wkv_space, validate_fn=_wkv_validate,
     make_inputs=_wkv_inputs, run=_wkv_run, ref=_wkv_ref,
+    default_shape={"b": 2, "t": 512, "h": 2, "hd": 48},
+    smoke_shape={"b": 1, "t": 64, "h": 1, "hd": 16},
+    atol=2e-4, rtol=2e-3,
+))
+
+
+# -- rwkv6 wkv: backward --------------------------------------------------------
+
+def _wkvb_space(meta: Mapping[str, Any]) -> ConfigSpace:
+    return ConfigSpace([
+        Param("chunk", CHUNKS),
+        Param("block_h", (1, 2, 4, 8)),
+        Param("dims", DIMS, ordinal=False),
+    ])
+
+
+def _wkvb_validate(cfg, meta) -> str | None:
+    chunk, bh, hd = cfg["chunk"], cfg["block_h"], meta["hd"]
+    # reverse-cell residuals: per-token kv outer products + state stack
+    return (_divides(meta["t"], chunk, "chunk")
+            or _divides(meta["h"], bh, "block_h")
+            or _vmem(_f32(10 * chunk * bh * hd + 2 * bh * hd
+                          + 3 * bh * hd * hd),
+                     _f32(2 * chunk * bh * hd * hd)))
+
+
+def _wkvb_inputs(meta, dtype, rng):
+    inputs = _wkv_inputs(meta, dtype, rng)
+    b, t, h, hd = (meta[k] for k in ("b", "t", "h", "hd"))
+    dy = jnp.asarray(rng.standard_normal((b, t, h, hd)), jnp.float32)
+    ds = jnp.asarray(rng.standard_normal((b, h, hd, hd)), jnp.float32)
+    return inputs + (dy, ds)
+
+
+def _wkvb_run(cfg, inputs, interpret):
+    from ...kernels.rwkv6_wkv.kernel import wkv6_bwd
+
+    return wkv6_bwd(*inputs, chunk=cfg["chunk"], block_h=cfg["block_h"],
+                    dims=cfg["dims"], interpret=interpret)
+
+
+def _wkvb_ref(inputs):
+    from ...kernels.rwkv6_wkv.ref import wkv6_ref
+
+    *primals, dy, ds = inputs
+    _, vjp = jax.vjp(lambda *args: wkv6_ref(*args), *primals)
+    return vjp((dy, ds))
+
+
+register_kernel(KernelSpec(
+    name="rwkv6_wkv_bwd",
+    defaults={"chunk": 64, "block_h": 1, "dims": "parallel"},
+    space_fn=_wkvb_space, validate_fn=_wkvb_validate,
+    make_inputs=_wkvb_inputs, run=_wkvb_run, ref=_wkvb_ref,
     default_shape={"b": 2, "t": 512, "h": 2, "hd": 48},
     smoke_shape={"b": 1, "t": 64, "h": 1, "hd": 16},
     atol=2e-4, rtol=2e-3,

@@ -53,11 +53,14 @@ def test_divisor_matches_linear_scan():
 def test_every_kernel_exposes_a_tunable_space():
     names = ktune.list_kernels()
     assert set(names) >= {"flash_attention", "decode_attention",
-                          "mamba_scan", "rwkv6_wkv", "dna_automaton"}
+                          "mamba_scan", "mamba_scan_bwd", "rwkv6_wkv",
+                          "rwkv6_wkv_bwd", "dna_automaton"}
     for name in names:
         spec = ktune.get_kernel(name)
         space = spec.space(spec.smoke_shape)
-        assert space.size() >= 2, name
+        # every space must be combinatorially interesting: the paper's
+        # search strategies degenerate on near-singleton spaces
+        assert space.size() >= 64, (name, space.size())
         default = spec.default_config(space, spec.smoke_shape)
         assert spec.validate(default, spec.smoke_shape) is None, name
         # the spaces deliberately contain invalid candidates: the
@@ -165,6 +168,41 @@ def test_best_record_spans_strategies(tmp_path):
         r.best_energy_measured for r in by_strategy if r is not None)
 
 
+def test_space_change_forces_retune(tmp_path):
+    """Editing a kernel's ConfigSpace must invalidate its cached tune:
+    the store key hashes the space fingerprint, so the narrowed space
+    misses and fresh measurements happen (no stale winner is served)."""
+    import dataclasses
+
+    from repro.core.space import ConfigSpace, Param
+
+    store = TuningStore(tmp_path / "kernels.json", devices="pinned")
+    first = ktune.tune_kernel("rwkv6_wkv", strategy="random", iterations=2,
+                              smoke=True, repeats=1, seed=0, store=store)
+    assert first.n_measured > 0
+    again = ktune.tune_kernel("rwkv6_wkv", strategy="random", iterations=2,
+                              smoke=True, repeats=1, seed=0, store=store)
+    assert again.result.from_cache and again.n_measured == 0
+
+    spec = ktune.get_kernel("rwkv6_wkv")
+
+    def narrowed(meta):
+        space = spec.space_fn(meta)
+        return ConfigSpace([
+            Param(p.name, p.values[:-1], ordinal=p.ordinal)
+            if p.name == "chunk" else p for p in space.params])
+
+    try:
+        ktune.register_kernel(dataclasses.replace(spec, space_fn=narrowed))
+        redo = ktune.tune_kernel("rwkv6_wkv", strategy="random",
+                                 iterations=2, smoke=True, repeats=1,
+                                 seed=0, store=store)
+        assert not redo.result.from_cache
+        assert redo.n_measured > 0
+    finally:
+        ktune.register_kernel(spec)
+
+
 # -- the ops tuned= path ---------------------------------------------------------
 
 def test_tuned_true_falls_back_gracefully(tmp_path, tuned_path_disabled):
@@ -204,3 +242,28 @@ def test_tuned_path_resolves_recorded_config(tmp_path, tuned_path_disabled):
     want = int(dna_ref.fa_match_ref(text, jnp.asarray(table),
                                     jnp.asarray(accept))[0])
     assert got == want
+
+
+def test_hand_edited_stale_config_is_dropped(tmp_path, tuned_path_disabled):
+    """A store entry whose best_config is no longer a point of the
+    current space (hand-edited file, renamed launch param) must resolve
+    to {} — the ops layer keeps its defaults rather than crashing."""
+    import json
+
+    path = tmp_path / "kernels.json"
+    store = TuningStore(path, devices="pinned")
+    out = ktune.tune_kernel("rwkv6_wkv", strategy="random", iterations=2,
+                            smoke=True, repeats=1, seed=0, store=store)
+    spec = ktune.get_kernel("rwkv6_wkv")
+    meta = dict(spec.smoke_shape)
+    ktune.configure(TuningStore(path, devices="pinned"), enabled=False)
+    assert ktune.resolve_config("rwkv6_wkv", meta,
+                                jnp.float32) == out.best_config
+
+    data = json.loads(path.read_text())
+    for entry in data.values():
+        for report in entry["reports"].values():
+            report["best_config"]["chunk"] = 999      # out of the domain
+    path.write_text(json.dumps(data))
+    ktune.configure(TuningStore(path, devices="pinned"), enabled=False)
+    assert ktune.resolve_config("rwkv6_wkv", meta, jnp.float32) == {}

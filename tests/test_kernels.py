@@ -134,6 +134,74 @@ def test_wkv6_gradients_match_ref():
                                rtol=1e-4)
 
 
+def test_wkv6_chunked_matches_serial_at_every_chunk_size():
+    """The matrix-form chunked formulation must agree with the serial
+    grid program at every chunk size the tuning space can select."""
+    from repro.tune import kernels as ktune
+
+    b, t, h, hd = 2, 128, 2, 32
+    r, k, v = (_randn(b, t, h, hd, scale=0.5) for _ in range(3))
+    w = jnp.asarray(jax.nn.sigmoid(RNG.standard_normal((b, t, h, hd)) + 2),
+                    jnp.float32)
+    u = _randn(h, hd, scale=0.1)
+    y0, s0 = wkv_ops.wkv6(r, k, v, w, u)          # lanes=0: serial default
+    spec = ktune.get_kernel("rwkv6_wkv")
+    meta = {"b": b, "t": t, "h": h, "hd": hd}
+    space = spec.space(meta)
+    chunks = space["chunk"].values
+    covered = set()
+    for chunk in chunks:
+        for lanes in space["lanes"].values:
+            cfg = {"chunk": chunk, "lanes": lanes, "block_h": 2,
+                   "dims": "parallel"}
+            if lanes == 0 or spec.validate(cfg, meta) is not None:
+                continue
+            y, s = wkv_ops.wkv6(r, k, v, w, u, chunk=chunk, lanes=lanes,
+                                block_h=2)
+            np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                                       atol=2e-5, rtol=2e-4, err_msg=str(cfg))
+            np.testing.assert_allclose(np.asarray(s), np.asarray(s0),
+                                       atol=2e-5, rtol=2e-4, err_msg=str(cfg))
+            covered.add(chunk)
+    # every chunk size the space allows for this shape must be exercised
+    assert covered == {c for c in chunks if t % c == 0 and c <= 64}
+
+
+@pytest.mark.parametrize("b,t,h,hd,chunk,dtype", [
+    (1, 32, 1, 16, 8, jnp.float32),
+    (2, 64, 2, 32, 16, jnp.float32),
+    (1, 64, 2, 16, 32, jnp.bfloat16),
+])
+def test_wkv6_pallas_backward_matches_ref_grads(b, t, h, hd, chunk, dtype):
+    """The recompute-in-backward Pallas sweep vs jax.grad of the ref,
+    for every differentiable operand, with a state cotangent in play."""
+    r, k, v = (_randn(b, t, h, hd, scale=0.5).astype(dtype)
+               for _ in range(3))
+    w = jnp.asarray(jax.nn.sigmoid(RNG.standard_normal((b, t, h, hd)) + 2),
+                    dtype)
+    u = _randn(h, hd, scale=0.1).astype(dtype)
+
+    def loss(fn):
+        def inner(r, k, v, w, u):
+            y, s = fn(r, k, v, w, u)
+            return y.sum() + 0.5 * s.sum()
+        return inner
+
+    got = jax.grad(loss(lambda *a: wkv_ops.wkv6(*a, chunk=chunk)),
+                   argnums=(0, 1, 2, 3, 4))(r, k, v, w, u)
+    # the ops layer computes in f32 regardless of input dtype; hold the
+    # ref to the same contract so only input/grad rounding differs
+    want = jax.grad(loss(lambda *a: wkv_ref.wkv6_ref(
+        *(x.astype(jnp.float32) for x in a))), argnums=(0, 1, 2, 3, 4))(
+        r, k, v, w, u)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    for name, g1, g2 in zip("rkvwu", got, want):
+        np.testing.assert_allclose(np.asarray(g1, np.float32),
+                                   np.asarray(g2, np.float32),
+                                   atol=tol, rtol=rtol, err_msg=name)
+
+
 # -- mamba selective scan -----------------------------------------------------------
 
 @pytest.mark.parametrize("bt,t,di,s,block_d,chunk", [
@@ -168,6 +236,79 @@ def test_selective_scan_gradients():
         x, delta, a, b, c, d)[0].sum())(x)
     np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5,
                                rtol=1e-4)
+
+
+def test_selective_scan_chunked_matches_serial_at_every_chunk_size():
+    """The chunked parallel-scan formulation must agree with the serial
+    grid program at every chunk size the tuning space can select."""
+    from repro.tune import kernels as ktune
+
+    bt, t, di, s = 2, 128, 64, 4
+    x = _randn(bt, t, di)
+    delta = jnp.abs(_randn(bt, t, di, scale=0.1))
+    a = -(jnp.abs(_randn(di, s)) + 0.5)
+    b, c = _randn(bt, t, s), _randn(bt, t, s)
+    d = _randn(di)
+    y0, h0 = ms_ops.selective_scan(x, delta, a, b, c, d)   # lanes=0: serial
+    spec = ktune.get_kernel("mamba_scan")
+    meta = {"bt": bt, "t": t, "di": di, "s": s}
+    space = spec.space(meta)
+    chunks = space["chunk"].values
+    covered = set()
+    for chunk in chunks:
+        for lanes in space["lanes"].values:
+            cfg = {"block_d": 32, "chunk": chunk, "lanes": lanes,
+                   "unroll": 1, "dims": "parallel"}
+            if lanes == 0 or spec.validate(cfg, meta) is not None:
+                continue
+            y, h = ms_ops.selective_scan(x, delta, a, b, c, d, block_d=32,
+                                         chunk=chunk, lanes=lanes)
+            np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                                       atol=2e-5, rtol=2e-4, err_msg=str(cfg))
+            np.testing.assert_allclose(np.asarray(h), np.asarray(h0),
+                                       atol=2e-5, rtol=2e-4, err_msg=str(cfg))
+            covered.add(chunk)
+    # every chunk that can pair with some lane count for t=128 shows up
+    assert covered == {c for c in chunks
+                       if any(l and t % (c * l) == 0
+                              for l in space["lanes"].values)}
+
+
+@pytest.mark.parametrize("bt,t,di,s,chunk,dtype", [
+    (1, 16, 32, 4, 8, jnp.float32),
+    (2, 64, 48, 8, 16, jnp.float32),
+    (1, 64, 32, 4, 32, jnp.bfloat16),
+])
+def test_selective_scan_pallas_backward_matches_ref_grads(bt, t, di, s,
+                                                          chunk, dtype):
+    """The recompute-in-backward Pallas sweep vs jax.grad of the ref,
+    for every differentiable operand, with a state cotangent in play."""
+    x = _randn(bt, t, di).astype(dtype)
+    delta = jnp.abs(_randn(bt, t, di, scale=0.1)).astype(dtype)
+    a = -(jnp.abs(_randn(di, s)) + 0.5).astype(dtype)
+    b, c = (_randn(bt, t, s).astype(dtype) for _ in range(2))
+    d = _randn(di).astype(dtype)
+
+    def loss(fn):
+        def inner(x, delta, a, b, c, d):
+            y, h = fn(x, delta, a, b, c, d)
+            return y.sum() + 0.5 * h.sum()
+        return inner
+
+    args = (x, delta, a, b, c, d)
+    got = jax.grad(loss(lambda *a_: ms_ops.selective_scan(
+        *a_, block_d=32, chunk=chunk)), argnums=tuple(range(6)))(*args)
+    # the ops layer computes in f32 regardless of input dtype; hold the
+    # ref to the same contract so only input/grad rounding differs
+    want = jax.grad(loss(lambda *a_: ms_ref.selective_scan_ref(
+        *(v_.astype(jnp.float32) for v_ in a_))),
+        argnums=tuple(range(6)))(*args)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    for name, g1, g2 in zip(("x", "delta", "a", "b", "c", "d"), got, want):
+        np.testing.assert_allclose(np.asarray(g1, np.float32),
+                                   np.asarray(g2, np.float32),
+                                   atol=tol, rtol=rtol, err_msg=name)
 
 
 # -- DNA automaton -------------------------------------------------------------------
