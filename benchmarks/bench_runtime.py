@@ -1,23 +1,31 @@
 """Benchmark: static split vs the online chunked scheduler.
 
-Two sections, written to BENCH_runtime.json:
+Sections, written to BENCH_runtime.json:
 
   1. ``sim_convergence`` — a simulated 2-group setup with a 3:1 per-row
-     speed skew (serial device queues, the timing model the rebalancer
-     sees on real hardware).  Measures the oracle static split (0.75),
-     the naive static 50/50 split, and the online scheduler starting
-     blind at 50/50 — recording the step it converges (first step whose
-     time is within 10% of oracle and stays there) and the steady-state
-     ratio.  Asserts convergence within 20 steps and a steady state
-     within 10% of the oracle (the repo's acceptance bar).
+     speed skew (serial device queues on a ``VirtualClock``, the timing
+     model the rebalancer sees on real hardware).  Measures the oracle
+     static split (0.75), the naive static 50/50 split, and the online
+     scheduler starting blind at 50/50 — recording the step it converges
+     (first step whose time is within 10% of oracle and stays there) and
+     the steady-state ratio.  Asserts convergence within 20 steps and a
+     steady state within 10% of the oracle (the repo's acceptance bar).
   2. ``real_dispatch`` — 8 forced host devices split into two groups of
      4 running a real jitted reduction: one-shot static dispatch
      (``HeterogeneousRunner``) vs the chunked double-buffered scheduler
      (``ChunkedScheduler``), so the chunking overhead on equal-speed
      groups is visible in the trajectory.
+  3. ``degraded`` (with ``--degraded``, and in full runs) — resilience
+     bars from ``docs/resilience.md``: kill one of two groups mid-stream
+     and assert throughput recovers to within 1.15x of the survivor-only
+     static oracle within 10 steps; script a controller regression under
+     a ``ServeGuard`` and assert the kill switch pins the stored
+     known-good split to within 1.10x of its step time within
+     ``patience`` steps of the regression onset.
 
 Usage:
-    PYTHONPATH=src python benchmarks/bench_runtime.py [--smoke] [--out PATH]
+    PYTHONPATH=src python benchmarks/bench_runtime.py [--smoke]
+        [--degraded] [--out PATH]
 """
 
 from __future__ import annotations
@@ -41,8 +49,10 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import numpy as np  # noqa: E402
 
 from repro.core.hetero import DeviceGroup, HeterogeneousRunner  # noqa: E402
-from repro.runtime import ChunkedScheduler, EwmaController  # noqa: E402
-from repro.runtime.simulate import (make_serial_sim_builder,  # noqa: E402
+from repro.runtime import (ChunkedScheduler, EwmaController,  # noqa: E402
+                           KillSwitch, ServeGuard)
+from repro.runtime.simulate import (FaultInjector, FaultPlan,  # noqa: E402
+                                    VirtualClock, make_serial_sim_builder,
                                     sim_skew_groups)
 
 ROOT = Path(__file__).resolve().parents[1]
@@ -56,10 +66,12 @@ def bench_sim_convergence(*, skew: int = 3, steps: int = 20,
     batch = {"x": np.zeros((batch_rows, 4), np.float32)}
 
     def run(shares, n, rebalance):
+        clock = VirtualClock()       # deterministic, CI-load independent
         sched = ChunkedScheduler(
-            make_serial_sim_builder(per_row_s), sim_skew_groups(skew),
+            make_serial_sim_builder(per_row_s, clock=clock),
+            sim_skew_groups(skew),
             controller=EwmaController(2, shares=np.asarray(shares),
-                                      min_share=0.02))
+                                      min_share=0.02), clock=clock)
         return sched, [sched.step(batch, rebalance=rebalance)
                        for _ in range(n)]
 
@@ -112,8 +124,10 @@ def bench_session_tuned_split(*, skew: int = 3, iterations: int = 14,
 
     batch = {"x": np.zeros((batch_rows, 4), np.float32)}
     controller = EwmaController(2, min_share=0.02)
-    sched = ChunkedScheduler(make_serial_sim_builder(per_row_s),
-                             sim_skew_groups(skew), controller=controller)
+    clock = VirtualClock()
+    sched = ChunkedScheduler(make_serial_sim_builder(per_row_s, clock=clock),
+                             sim_skew_groups(skew), controller=controller,
+                             clock=clock)
 
     def measure(cfg):
         f = cfg["fraction"] / 100.0
@@ -198,16 +212,166 @@ def bench_real_dispatch(*, steps: int = 20, rows: int = 256,
     return out
 
 
+# -- section 3: degraded-mode resilience (docs/resilience.md) -------------------
+
+def bench_degraded_kill(*, skew: int = 3, kill_at: int = 6, steps: int = 20,
+                        per_row_s: float = 0.0004,
+                        batch_rows: int = 128) -> dict:
+    """Kill the dominant (fast) group mid-stream and measure recovery.
+
+    The surviving slow group must absorb the whole batch: the bar is
+    step time within **1.15x of the survivor-only static oracle within
+    10 steps** of the kill.  The oracle comes from a fresh single-group
+    scheduler over the same timing model, so the ratio is exact (virtual
+    clock, no noise)."""
+    batch = {"x": np.zeros((batch_rows, 4), np.float32)}
+
+    # survivor-only static oracle: the slow group alone takes everything
+    oclock = VirtualClock()
+    survivor = sim_skew_groups(skew)[1:]
+    osched = ChunkedScheduler(
+        make_serial_sim_builder(per_row_s, clock=oclock), survivor,
+        controller=EwmaController(1), clock=oclock)
+    t_survivor = float(np.median(
+        [osched.step(batch, rebalance=False)["t_step"] for _ in range(5)]))
+
+    clock = VirtualClock()
+    groups = sim_skew_groups(skew)
+    injector = FaultInjector(FaultPlan().kill(0, at=kill_at), groups)
+    sched = ChunkedScheduler(
+        make_serial_sim_builder(per_row_s, clock=clock, injector=injector),
+        groups, controller=EwmaController(2, min_share=0.02), clock=clock)
+    injector.attach(sched)
+
+    recs = []
+    for _ in range(steps):
+        injector.tick()
+        recs.append(sched.step(batch))
+    t_steps = [r["t_step"] for r in recs]
+    assert all(sum(r["rows_completed"]) == batch_rows for r in recs)
+
+    recovered_at = None                  # steps after the kill until the
+    for i in range(kill_at, steps):      # survivor-only bar is met
+        if t_steps[i] <= 1.15 * t_survivor:
+            recovered_at = i - kill_at
+            break
+
+    out = {
+        "skew": skew,
+        "kill_at_step": kill_at,
+        "t_healthy_s": round(float(np.median(t_steps[:kill_at])), 6),
+        "t_survivor_oracle_s": round(t_survivor, 6),
+        "t_after_recovery_s": round(float(np.median(t_steps[-5:])), 6),
+        "recovered_within_steps": recovered_at,
+        "recovered_vs_survivor_oracle": round(
+            float(np.median(t_steps[-5:])) / t_survivor, 4),
+        "rows_redispatched": int(recs[kill_at]["redispatched_rows"]),
+        "rows_lost": int(sum(batch_rows - sum(r["rows_completed"])
+                             for r in recs)),
+        "t_step_trajectory_s": [round(t, 6) for t in t_steps],
+    }
+    # acceptance bars (ISSUE 7): recovery <= 1.15x survivor oracle
+    # within <= 10 steps; no batch ever loses rows
+    assert recovered_at is not None and recovered_at <= 10, out
+    assert out["recovered_vs_survivor_oracle"] <= 1.15, out
+    assert out["rows_lost"] == 0, out
+    return out
+
+
+def bench_killswitch(*, skew: int = 3, poison_from: int = 10,
+                     steps: int = 30, per_row_s: float = 0.0004,
+                     batch_rows: int = 128,
+                     known_good_fraction: float = 0.75) -> dict:
+    """Script a controller regression and measure the kill switch.
+
+    From step ``poison_from`` the controller pushes the shares to a bad
+    split every update (a controller-trajectory failure — the scenario
+    the guard exists for; a hardware fault would not be fixed by a
+    stored split).  The guard's fallback is the stored known-good
+    split (``tune_stream_split`` caches it via ``TuningStore``; here the
+    tuned fraction feeds in directly).  Bars: the switch trips within
+    ``patience`` = 5 steps of the first regressing observation, and the
+    first pinned step lands within **1.10x of the known-good split's
+    step time**."""
+
+    class PoisonedController(EwmaController):
+        def update(self, times, rows=None):
+            self.updates = getattr(self, "updates", 0) + 1
+            if self.updates >= poison_from:
+                self.shares = np.asarray([0.15, 0.85])
+                return self.shares
+            return super().update(times, rows=rows)
+
+    batch = {"x": np.zeros((batch_rows, 4), np.float32)}
+    known_good = np.asarray([known_good_fraction, 1 - known_good_fraction])
+
+    # the known-good split's own step time (the restore target)
+    oclock = VirtualClock()
+    osched = ChunkedScheduler(
+        make_serial_sim_builder(per_row_s, clock=oclock),
+        sim_skew_groups(skew),
+        controller=EwmaController(2, shares=known_good.copy(),
+                                  min_share=0.02), clock=oclock)
+    t_known_good = float(np.median(
+        [osched.step(batch, rebalance=False)["t_step"] for _ in range(5)]))
+
+    clock = VirtualClock()
+    sched = ChunkedScheduler(
+        make_serial_sim_builder(per_row_s, clock=clock),
+        sim_skew_groups(skew),
+        controller=PoisonedController(2, min_share=0.02), clock=clock)
+    switch = KillSwitch(threshold=1.5, patience=5, cooldown=3)
+    guard = ServeGuard(sched, switch=switch, fallback=known_good)
+
+    recs = [guard.step(batch) for _ in range(steps)]
+    verdicts = [r["guard"]["verdict"] for r in recs]
+    t_steps = [r["t_step"] for r in recs]
+    onset = verdicts.index("regressing")
+    trip = verdicts.index("trip")
+
+    out = {
+        "skew": skew,
+        "patience": switch.patience,
+        "threshold": switch.threshold,
+        "known_good_shares": [float(s) for s in known_good],
+        "t_known_good_s": round(t_known_good, 6),
+        "regression_onset_step": onset,
+        "tripped_at_step": trip,
+        "trip_latency_steps": trip - onset + 1,
+        "t_first_pinned_s": round(t_steps[trip + 1], 6),
+        "pinned_vs_known_good": round(t_steps[trip + 1] / t_known_good, 4),
+        "n_trips": switch.n_trips,
+        "rearmed": "rearm" in verdicts,
+        "verdicts": verdicts,
+    }
+    # acceptance bars (ISSUE 7): trip within K=5 steps of the scripted
+    # regression, fallback restores <= 1.10x of the stored known-good
+    assert out["trip_latency_steps"] <= switch.patience, out
+    assert out["pinned_vs_known_good"] <= 1.10, out
+    assert out["rearmed"], out
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (fewer steps, smaller arrays)")
+    ap.add_argument("--degraded", action="store_true",
+                    help="run the degraded/kill-switch resilience "
+                    "sections (always on in full runs)")
     ap.add_argument("--out", default=str(ROOT / "BENCH_runtime.json"))
     args = ap.parse_args()
 
     t0 = time.perf_counter()
     results = {"sim_convergence": bench_sim_convergence(),
                "session_tuned_split": bench_session_tuned_split()}
+    if args.degraded or not args.smoke:
+        # the virtual-clock resilience sections are instant; full runs
+        # always include them so BENCH_runtime.json carries the bars
+        results["degraded"] = bench_degraded_kill()
+        results["killswitch"] = bench_killswitch(
+            known_good_fraction=results["session_tuned_split"]
+            ["tuned_fraction"])
     if args.smoke:
         results["real_dispatch"] = bench_real_dispatch(steps=3, rows=64,
                                                        cols=512)
@@ -235,6 +399,15 @@ def main() -> None:
     print(f"real: static {rd['t_static_split_s']}s vs online "
           f"{rd['t_online_sched_s']}s ({rd['online_vs_static']}x, "
           f"{rd['plan_changes']} plan changes) on {rd['devices']} devices")
+    if "degraded" in results:
+        dg, ks = results["degraded"], results["killswitch"]
+        print(f"degraded: kill at step {dg['kill_at_step']}, recovered in "
+              f"{dg['recovered_within_steps']} steps to "
+              f"{dg['recovered_vs_survivor_oracle']}x of survivor oracle, "
+              f"{dg['rows_lost']} rows lost")
+        print(f"killswitch: tripped {ks['trip_latency_steps']} steps after "
+              f"onset, pinned split at {ks['pinned_vs_known_good']}x of "
+              f"known-good{', re-armed' if ks['rearmed'] else ''}")
     print(f"wrote {out}")
 
 

@@ -29,6 +29,26 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 __all__ = ["DeviceGroup", "HeterogeneousRunner", "proportional_rebalance"]
 
 
+def result_ready_time(result) -> float | None:
+    """Exact completion instant of a dispatch result, when knowable.
+
+    Emulated results (``repro.runtime.simulate.SimReadyAt``) expose
+    ``ready_at`` — the absolute instant (wall or virtual clock) the
+    result became ready; returning it makes timing independent of
+    thread wake-up latency, which is what lets whole trajectories run
+    on a deterministic :class:`~repro.runtime.simulate.VirtualClock`.
+    Real ``jax.Array`` leaves have no such attribute: return ``None``
+    and the caller falls back to reading its clock after blocking.
+    """
+    ts = None
+    for leaf in jax.tree.leaves(result):
+        t = getattr(leaf, "ready_at", None)
+        if t is None:
+            return None
+        ts = t if ts is None else max(ts, t)
+    return ts
+
+
 @dataclass
 class DeviceGroup:
     name: str
@@ -71,16 +91,24 @@ class HeterogeneousRunner:
 
     def __init__(self, step_builder: Callable[[DeviceGroup], Callable],
                  group_a: DeviceGroup, group_b: DeviceGroup,
-                 fraction: float = 0.5):
+                 fraction: float = 0.5, *, clock=None):
         """``step_builder(group)`` returns ``fn(batch_rows) -> result`` that
         runs on that group's devices (the builder jits with the group's
-        mesh).  ``fraction`` is group A's share of each batch."""
+        mesh).  ``fraction`` is group A's share of each batch.  ``clock``
+        (anything with ``now()``, e.g. a ``runtime.simulate.VirtualClock``
+        shared with a simulated builder) replaces the wall clock so
+        simulated trajectories are deterministic."""
         self.group_a = group_a
         self.group_b = group_b
         self.fraction = fraction
+        self.clock = clock
         self._fn_a = step_builder(group_a)
         self._fn_b = step_builder(group_b)
         self.history: list[dict] = []
+
+    def _now(self) -> float:
+        return self.clock.now() if self.clock is not None \
+            else time.perf_counter()
 
     def _split(self, batch: dict) -> tuple[dict, dict]:
         n = jax.tree.leaves(batch)[0].shape[0]
@@ -102,13 +130,15 @@ class HeterogeneousRunner:
 
     def step(self, batch: dict, rebalance: bool = True) -> dict:
         a, b = self._split(batch)
-        t0 = time.perf_counter()
+        t0 = self._now()
         ra = self._fn_a(a)                      # async dispatch
         rb = self._fn_b(b)                      # overlaps with group A
         self._block(ra)
-        t_a = time.perf_counter() - t0
+        ready_a = result_ready_time(ra)
+        t_a = (ready_a if ready_a is not None else self._now()) - t0
         self._block(rb)
-        t_b = time.perf_counter() - t0
+        ready_b = result_ready_time(rb)
+        t_b = (ready_b if ready_b is not None else self._now()) - t0
         rec = {
             "fraction": self.fraction,
             "t_a": t_a, "t_b": t_b, "t_step": max(t_a, t_b),

@@ -21,7 +21,23 @@ import inspect
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
-__all__ = ["RestartReport", "run_with_restarts"]
+__all__ = ["GroupFailure", "RestartReport", "run_with_restarts"]
+
+
+class GroupFailure(RuntimeError):
+    """A device group failed at dispatch or completion time.
+
+    The shared failure type of both fault layers: the *training* path
+    treats it like any other exception (``run_with_restarts`` retries
+    from the last checkpoint), while the *serving* path recognizes it
+    structurally — ``repro.runtime.ChunkedScheduler`` demotes the
+    raising group, re-projects the surviving shares and re-dispatches
+    the group's unfinished chunks to survivors (see
+    ``docs/resilience.md``).  Fault injection
+    (``repro.runtime.simulate.FaultInjector``) raises it for scripted
+    kill/transient events so tests exercise exactly the production
+    demotion path.
+    """
 
 
 def _accepts_fail_at_step(fn: Callable[..., Any]) -> bool:

@@ -198,7 +198,7 @@ def serve_stream(cfg, *, groups: list[DeviceGroup], n_batches: int = 4,
                  seed: int = 0, chunks_per_group: int = 2,
                  row_quantum: int = 2, controller=None,
                  initial_shares=None, model=None,
-                 step_builder=None) -> dict:
+                 step_builder=None, guard=None) -> dict:
     """Adaptive serving: chunk-schedule request batches across groups.
 
     Each group holds its own (replicated) copy of the params and runs
@@ -210,7 +210,11 @@ def serve_stream(cfg, *, groups: list[DeviceGroup], n_batches: int = 4,
     distinct chunk shape, so coarse quanta keep the compiled-shape set
     small while the split drifts).  ``initial_shares`` (e.g. from
     ``tune_stream_split``) starts the controller at a tuned split
-    instead of uniform.
+    instead of uniform.  ``guard`` (``True`` or a preconfigured
+    ``repro.runtime.ServeGuard``) adds the kill-switch guardrail: if the
+    online trajectory regresses, the split pins to the last known-good
+    static configuration until a cool-down probe passes
+    (``docs/resilience.md``).
     """
     from ..runtime import EwmaController, StreamingPipeline
 
@@ -231,7 +235,7 @@ def serve_stream(cfg, *, groups: list[DeviceGroup], n_batches: int = 4,
 
     pipeline = StreamingPipeline(
         step_builder, groups, chunks_per_group=chunks_per_group,
-        row_quantum=row_quantum, controller=controller)
+        row_quantum=row_quantum, controller=controller, guard=guard)
     rng = np.random.default_rng(seed)
     batches = [{"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)}
@@ -263,6 +267,15 @@ def main() -> None:
     ap.add_argument("--tune-strategy", default="sam",
                     help="registered strategy for --tune-split "
                     "(see repro.tune.list_strategies())")
+    ap.add_argument("--guard", action="store_true",
+                    help="kill-switch guardrail: pin the last known-good "
+                    "static split when the online controller regresses "
+                    "(docs/resilience.md)")
+    ap.add_argument("--guard-threshold", type=float, default=1.5,
+                    help="trip when step time exceeds this multiple of "
+                    "the rolling baseline")
+    ap.add_argument("--guard-patience", type=int, default=5,
+                    help="consecutive regressing steps before tripping")
     ap.add_argument("--attn-impl", default=None,
                     choices=["auto", "xla", "pallas"],
                     help="override the arch's mixer implementation "
@@ -312,14 +325,25 @@ def main() -> None:
             print(f"tuned split: {initial_shares.round(2)} "
                   f"({tuned.strategy}, {tuned.n_experiments} measurements"
                   f"{', cached' if tuned.from_cache else ''})")
+        guard = None
+        if args.guard:
+            from ..runtime import KillSwitch, ServeGuard
+            # last known-good fallback: the tuned split when we have one
+            # (tuner-measured, the strongest prior); otherwise the guard
+            # snapshots the best online split it observes
+            guard = ServeGuard(
+                None, switch=KillSwitch(threshold=args.guard_threshold,
+                                        patience=args.guard_patience),
+                fallback=initial_shares)
         out = serve_stream(cfg, groups=groups, n_batches=args.stream_batches,
                            batch=args.batch, prompt_len=args.prompt_len,
                            gen=args.gen, initial_shares=initial_shares,
-                           step_builder=builder)
+                           step_builder=builder, guard=guard)
         s = out["summary"]
+        guarded = f"  guard trips {s['guard_trips']}" if args.guard else ""
         print(f"stream: {s['batches']} batches  "
               f"{s['tokens_per_s_mean']:.1f} tok/s  "
-              f"shares {s['shares_final']}")
+              f"shares {s['shares_final']}{guarded}")
         return
     out = serve_session(cfg, batch=args.batch, prompt_len=args.prompt_len,
                         gen=args.gen)

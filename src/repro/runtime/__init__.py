@@ -29,15 +29,34 @@ closed at run time (usage guide: ``docs/runtime.md``):
     batches with overlapped transfer/compute per chunk;
     ``launch/serve.py`` uses it so serving sessions adapt their split
     per request mix.
+
+``guard`` — kill-switch guardrail (``docs/resilience.md``).
+    :class:`~repro.runtime.guard.ServeGuard` watches the realized
+    step-time trajectory through a :class:`~repro.runtime.guard.KillSwitch`
+    and pins the last known-good static split when the online
+    controller regresses, re-arming after a cool-down probe.
+
+``simulate`` — deterministic sims, clocks and fault injection.
+    :class:`~repro.runtime.simulate.VirtualClock` +
+    :class:`~repro.runtime.simulate.FaultPlan` /
+    :class:`~repro.runtime.simulate.FaultInjector` script failures
+    (kill/slow/transient/recover) against the serial-device sim or real
+    dispatch, deterministically.
 """
 
 from .feedback import OnlineSurrogateLoop
+from .guard import KillSwitch, ServeGuard, fallback_from_store
 from .scheduler import ChunkedScheduler, EwmaController, ewma_rebalance
+from .simulate import (FaultInjector, FaultPlan, GroupFailure, VirtualClock,
+                       make_serial_sim_builder, sim_skew_groups)
 from .store import TuningStore, space_fingerprint, workload_signature
 from .stream import StreamingPipeline, dna_stream_builder
 
 __all__ = [
     "ChunkedScheduler", "EwmaController", "ewma_rebalance",
+    "KillSwitch", "ServeGuard", "fallback_from_store",
+    "FaultInjector", "FaultPlan", "GroupFailure", "VirtualClock",
+    "make_serial_sim_builder", "sim_skew_groups",
     "OnlineSurrogateLoop",
     "TuningStore", "space_fingerprint", "workload_signature",
     "StreamingPipeline", "dna_stream_builder",

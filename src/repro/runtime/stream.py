@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core.hetero import DeviceGroup
+from .guard import ServeGuard
 from .scheduler import ChunkedScheduler, EwmaController
 
 __all__ = ["StreamingPipeline", "dna_stream_builder"]
@@ -93,11 +94,26 @@ class StreamingPipeline:
                  groups: Sequence[DeviceGroup], *,
                  controller: EwmaController | None = None,
                  chunks_per_group: int = 2, inflight: int = 2,
-                 row_quantum: int = 1):
+                 row_quantum: int = 1, clock=None,
+                 dispatch_timeout_s: float | None = None,
+                 guard: "ServeGuard | bool | None" = None):
+        """``guard=True`` wraps the scheduler in a default
+        :class:`~repro.runtime.guard.ServeGuard` (kill-switch fallback
+        to the best split seen); pass a preconfigured ``ServeGuard``
+        (unbound: ``scheduler=None``) to set thresholds or a stored
+        fallback split.  ``clock``/``dispatch_timeout_s`` pass through
+        to the scheduler (see ``docs/resilience.md``)."""
         self.scheduler = ChunkedScheduler(
             step_builder, groups, controller=controller,
             chunks_per_group=chunks_per_group, inflight=inflight,
-            row_quantum=row_quantum)
+            row_quantum=row_quantum, clock=clock,
+            dispatch_timeout_s=dispatch_timeout_s)
+        if guard is True:
+            guard = ServeGuard(self.scheduler)
+        elif guard is not None and guard.scheduler is None:
+            guard.scheduler = self.scheduler
+            guard.__post_init__()       # re-validate fallback vs groups
+        self.guard = guard or None
         self.records: list[dict] = []
 
     @property
@@ -110,9 +126,13 @@ class StreamingPipeline:
         records with rows/s throughput added."""
         out = []
         for batch in batches:
-            rec = self.scheduler.step(batch, rebalance=rebalance)
-            rec = dict(rec, rows_total=int(sum(rec["rows"])),
-                       rows_per_s=sum(rec["rows"]) / max(rec["t_step"], 1e-9))
+            if self.guard is not None:
+                rec = self.guard.step(batch)   # guard owns the rebalance flag
+            else:
+                rec = self.scheduler.step(batch, rebalance=rebalance)
+            done = sum(rec["rows_completed"])
+            rec = dict(rec, rows_total=int(done),
+                       rows_per_s=done / max(rec["t_step"], 1e-9))
             out.append(rec)
         self.records.extend(out)
         return out
@@ -122,7 +142,7 @@ class StreamingPipeline:
         if not self.records:
             return {"batches": 0}
         t = [r["t_step"] for r in self.records]
-        return {
+        out = {
             "batches": len(self.records),
             "rows_total": int(sum(r["rows_total"] for r in self.records)),
             "t_total_s": float(sum(t)),
@@ -130,4 +150,10 @@ class StreamingPipeline:
                                               for r in self.records])),
             "t_step_last": float(t[-1]),
             "shares_final": [float(s) for s in self.scheduler.shares],
+            "live_final": [bool(x) for x in self.scheduler.live],
+            "failures": sum(len(r["failures"]) for r in self.records),
         }
+        if self.guard is not None:
+            out["guard_trips"] = self.guard.switch.n_trips
+            out["guard_tripped"] = self.guard.tripped
+        return out

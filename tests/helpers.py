@@ -13,19 +13,21 @@ SRC = REPO / "src"
 
 # Prepended to subprocess snippets that emulate an asynchronous device:
 # dispatch returns at once, the result becomes ready `cost` seconds later
-# (forced host devices share one CPU thread pool, so real concurrent
-# compute can't produce reliable per-group wall times).
+# on the shared virtual clock (forced host devices share one CPU thread
+# pool, so real concurrent compute can't produce reliable per-group wall
+# times — and wall-clock sleeps made these tests both slow and
+# CI-load-sensitive).  Runners must be built with ``clock=SIM_CLOCK`` so
+# their timestamps live on the same timeline.
 SIM_DEVICE_SNIPPET = """
-import time
+from repro.runtime.simulate import SimReadyAt, VirtualClock
 
-class SimReady:
-    # jax.Array-style blocking for an emulated device
+SIM_CLOCK = VirtualClock()
+
+class SimReady(SimReadyAt):
+    # jax.Array-style blocking for an emulated device: ready `cost`
+    # simulated seconds after dispatch (blocking advances the clock)
     def __init__(self, value, cost):
-        self.value = value
-        self._done_at = time.perf_counter() + cost
-    def block_until_ready(self):
-        time.sleep(max(0.0, self._done_at - time.perf_counter()))
-        return self
+        super().__init__(value, SIM_CLOCK.now() + cost, SIM_CLOCK)
 """
 
 

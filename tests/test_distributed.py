@@ -147,7 +147,7 @@ def builder(group):
         return SimReady(y, per_row_s * x.shape[0])
     return fn
 
-runner = HeterogeneousRunner(builder, ga, gb, fraction=0.5)
+runner = HeterogeneousRunner(builder, ga, gb, fraction=0.5, clock=SIM_CLOCK)
 batch = {"x": np.random.default_rng(0).standard_normal((64, 256)).astype(np.float32)}
 runner.step(batch)  # compile warmup both
 runner.step(batch)

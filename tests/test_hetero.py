@@ -100,7 +100,7 @@ def jit_builder(group):
     return fn
 
 batch = {"x": np.random.default_rng(0).standard_normal((64, 128)).astype(np.float32)}
-runner = HeterogeneousRunner(jit_builder, ga, gb, fraction=0.5)
+runner = HeterogeneousRunner(jit_builder, ga, gb, fraction=0.5, clock=SIM_CLOCK)
 
 # split invariants: group shares are device-aligned and cover the batch
 a, b = runner._split(batch)
@@ -114,15 +114,16 @@ assert rec["rows_a"] + rec["rows_b"] == 64
 
 # the paper's offline loop: SAM over the fraction space with measured
 # step times as the energy -> near the 3:1 optimum (0.75).  The energies
-# come from a pure simulated device pair (sleep-dominated, >=0.05 s per
-# step) so scheduler noise cannot reorder candidate fractions.
+# come from a pure simulated device pair on the virtual clock, so the
+# measured times are exact functions of the fraction — scheduler noise
+# cannot reorder candidate fractions and nothing sleeps.
 def sim_builder(group):
     per_row_s = 0.01 * group.work_multiplier / len(group.devices)
     def fn(batch):
         return SimReady(None, per_row_s * batch["x"].shape[0])
     return fn
 
-sim = HeterogeneousRunner(sim_builder, ga, gb, fraction=0.5)
+sim = HeterogeneousRunner(sim_builder, ga, gb, fraction=0.5, clock=SIM_CLOCK)
 e_half = sim.step(batch, rebalance=False)["t_step"]
 best = sim.tune_fraction_sa(batch, iterations=40, seed=0)
 assert 0.6 <= best <= 0.9, best

@@ -1,0 +1,688 @@
+"""Resilience guardrails under deterministic fault injection.
+
+Every scenario here is scripted through ``repro.runtime.simulate``
+(``FaultPlan`` + ``FaultInjector``) and runs on a ``VirtualClock``:
+trajectories are exact functions of the timing model — seeded,
+wall-clock independent, and identical across machines (no
+``time.sleep``-calibrated assertions anywhere).  The same plans run
+against the serial-device sim and real sharded dispatch (subprocess),
+so the demotion / re-dispatch / kill-switch paths tested here are the
+production ones.  Failure model and thresholds: ``docs/resilience.md``.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from helpers import run_subprocess
+
+from repro.runtime import (ChunkedScheduler, EwmaController, KillSwitch,
+                           ServeGuard, StreamingPipeline, VirtualClock,
+                           fallback_from_store, make_serial_sim_builder,
+                           sim_skew_groups)
+from repro.runtime.simulate import (FakeDevice, FaultEvent, FaultInjector,
+                                    FaultPlan, GroupFailure)
+from repro.core.hetero import DeviceGroup
+
+
+def make_sim(groups=None, *, plan=None, per_row_s=0.0005, skew=3,
+             controller=None, **sched_kw):
+    """Scheduler + injector on a fresh virtual clock (one line per test)."""
+    clock = VirtualClock()
+    groups = groups or sim_skew_groups(skew=skew)
+    injector = FaultInjector(plan or FaultPlan(), groups)
+    sched = ChunkedScheduler(
+        make_serial_sim_builder(per_row_s, clock=clock, injector=injector),
+        groups, clock=clock,
+        controller=controller or EwmaController(len(groups), min_share=0.02),
+        **sched_kw)
+    injector.attach(sched)
+    return sched, injector, clock
+
+
+def drive(sched, injector, batch, steps):
+    recs = []
+    for _ in range(steps):
+        injector.tick()
+        recs.append(sched.step(batch))
+    return recs
+
+
+def three_equal_groups():
+    return [DeviceGroup(n, [FakeDevice()] * 4) for n in ("a", "b", "c")]
+
+
+BATCH = {"x": np.zeros((64, 4), np.float32)}
+
+
+# -- FaultPlan / FaultEvent / FaultInjector -------------------------------------
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="explode", group=0)
+    with pytest.raises(ValueError):
+        FaultEvent(step=-1, kind="kill", group=0)
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="kill", group=-1)
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="slow", group=0, factor=0.0)
+
+
+def test_fault_plan_chaining_sorts_events():
+    plan = (FaultPlan().recover(0, at=9).kill(0, at=3)
+            .slow(1, at=5, factor=2.0).transient(1, at=1))
+    assert [e.step for e in plan.events] == [1, 3, 5, 9]
+    assert plan.last_step == 9
+    assert [e.kind for e in plan.at(5)] == ["slow"]
+    assert plan.at(7) == []
+
+
+def test_injector_rejects_event_for_unknown_group():
+    with pytest.raises(ValueError):
+        FaultInjector(FaultPlan().kill(5, at=0), sim_skew_groups())
+
+
+def test_injector_kill_persists_until_recover():
+    groups = sim_skew_groups()
+    inj = FaultInjector(FaultPlan().kill(0, at=1).recover(0, at=3), groups)
+    inj.tick()                                    # step 0: healthy
+    inj.check(groups[0])
+    inj.tick()                                    # step 1: killed
+    with pytest.raises(GroupFailure):
+        inj.check(groups[0])
+    inj.check(groups[1])                          # other group unaffected
+    inj.tick()                                    # step 2: still dead
+    with pytest.raises(GroupFailure):
+        inj.check(groups[0])
+    inj.tick()                                    # step 3: recovered
+    inj.check(groups[0])
+
+
+def test_injector_transient_raises_exactly_once():
+    groups = sim_skew_groups()
+    inj = FaultInjector(FaultPlan().transient(1, at=0), groups)
+    inj.tick()
+    with pytest.raises(GroupFailure):
+        inj.check(groups[1])
+    inj.check(groups[1])                          # healthy on the retry
+
+
+def test_injector_slow_factor_scales_sim_times_exactly():
+    group = [DeviceGroup("solo", [FakeDevice()] * 4)]
+    plan = FaultPlan().slow(0, at=1, factor=2.5).recover(0, at=2)
+    sched, inj, _ = make_sim(group, plan=plan,
+                             controller=EwmaController(1))
+    recs = drive(sched, inj, BATCH, 3)
+    t0, t1, t2 = (r["t_group"][0] for r in recs)
+    assert t1 == pytest.approx(2.5 * t0)          # exact scaling, no noise
+    assert t2 == pytest.approx(t0)                # recover clears the factor
+
+
+def test_injector_wrap_repeats_dispatch_for_slow():
+    calls = []
+
+    def builder(group):
+        def fn(chunk):
+            calls.append(group.name)
+            return chunk
+        return fn
+
+    groups = sim_skew_groups()
+    inj = FaultInjector(FaultPlan().slow(0, at=0, factor=3.0), groups)
+    wrapped = inj.wrap(builder)(groups[0])
+    inj.tick()
+    wrapped({"x": np.zeros(4)})
+    assert len(calls) == 3                        # ceil(3.0) repeats
+
+
+def test_injector_wrap_raises_for_killed_group():
+    groups = sim_skew_groups()
+    inj = FaultInjector(FaultPlan().kill(1, at=0), groups)
+    wrapped = inj.wrap(lambda g: lambda c: c)(groups[1])
+    inj.tick()
+    with pytest.raises(GroupFailure):
+        wrapped({"x": np.zeros(4)})
+
+
+# -- EwmaController elastic membership ------------------------------------------
+
+def test_drop_zeroes_share_and_renormalizes_survivors():
+    c = EwmaController(3, shares=np.array([0.5, 0.3, 0.2]), min_share=0.02)
+    c.drop(1)
+    assert c.shares[1] == 0.0
+    assert c.shares.sum() == pytest.approx(1.0)
+    # survivors keep their relative proportion (0.5 : 0.2), modulo the
+    # min-share floor the simplex projection maintains
+    assert c.shares[0] / c.shares[2] == pytest.approx(2.5, rel=0.05)
+    assert list(c.live) == [True, False, True]
+
+
+def test_drop_is_idempotent_and_protects_last_group():
+    c = EwmaController(2)
+    c.drop(0)
+    before = c.shares.copy()
+    c.drop(0)                                     # no-op
+    np.testing.assert_array_equal(c.shares, before)
+    with pytest.raises(RuntimeError):
+        c.drop(1)                                 # last live group
+    with pytest.raises(IndexError):
+        c.drop(7)
+
+
+def test_restore_readmits_and_is_idempotent():
+    c = EwmaController(2, min_share=0.02)
+    c.drop(0)
+    c.restore(0)
+    assert list(c.live) == [True, True]
+    assert c.shares[0] == pytest.approx(0.5)      # default: 1 / n_groups
+    assert c.shares.sum() == pytest.approx(1.0)
+    before = c.shares.copy()
+    c.restore(0)                                  # no-op
+    np.testing.assert_array_equal(c.shares, before)
+
+
+def test_update_ignores_dead_groups():
+    c = EwmaController(3, min_share=0.02, damping=1.0)
+    c.drop(2)
+    # group 1 twice as slow as group 0; dead group's entry is garbage
+    c.update([1.0, 2.0, 123.0])
+    assert c.shares[2] == 0.0
+    assert c.shares.sum() == pytest.approx(1.0)
+    assert c.shares[0] > c.shares[1]
+
+
+# -- ChunkedScheduler: elastic membership + redispatch --------------------------
+
+def test_kill_at_dispatch_loses_no_rows():
+    sched, inj, _ = make_sim(plan=FaultPlan().kill(0, at=2))
+    recs = drive(sched, inj, BATCH, 5)
+    for rec in recs:
+        assert sum(rec["rows_completed"]) == 64   # every batch completes
+    killed = recs[2]
+    assert killed["failures"] and killed["redispatched_rows"] > 0
+    assert killed["rows_completed"][0] == 0       # all on the survivor
+    for rec in recs[3:]:
+        assert rec["live"] == [False, True]
+        assert rec["rows"][0] == 0
+
+
+def test_kill_at_drain_redispatches_unconfirmed_chunks():
+    # the failure surfaces at block time (result poisoned), not dispatch
+    class PoisonedResult:
+        def block_until_ready(self):
+            raise GroupFailure("died while computing")
+
+    armed = {"on": False}
+
+    def builder(group):
+        def fn(chunk):
+            if group.name == "fast" and armed["on"]:
+                return PoisonedResult()
+            return chunk["x"]                     # plain ndarray: no block
+        return fn
+
+    sched = ChunkedScheduler(builder, sim_skew_groups(),
+                             controller=EwmaController(2, min_share=0.02))
+    rec = sched.step(BATCH, rebalance=False)
+    assert not rec["failures"]
+    armed["on"] = True
+    rec = sched.step(BATCH, rebalance=False)
+    assert "fast" in rec["failures"]
+    assert sum(rec["rows_completed"]) == 64
+    assert rec["rows_completed"][0] == 0
+
+
+def test_plan_cache_is_keyed_by_membership():
+    """Regression: ``_plans`` used to key on batch rows alone, so a
+    batch size seen before a drop could replay its stale plan and
+    dispatch rows to the dead group."""
+    sched, inj, _ = make_sim()
+    sched.step(BATCH)                             # cache the 2-live plan
+    sched.drop_group(0)
+    rec = sched.step(BATCH)
+    assert rec["rows"][0] == 0                    # stale plan not replayed
+    assert rec["rows_completed"] == [0, 64]
+    sched.restore_group(0)
+    rec = sched.step(BATCH)
+    assert rec["rows"][0] > 0                     # pre-drop key valid again
+
+
+def test_transient_failure_demotes_until_recover():
+    plan = FaultPlan().transient(1, at=2).recover(1, at=5)
+    sched, inj, _ = make_sim(plan=plan)
+    recs = drive(sched, inj, BATCH, 8)
+    assert recs[2]["failures"]                    # the transient step
+    assert recs[3]["live"] == [True, False]       # demoted, not retried
+    assert recs[5]["live"] == [True, True]        # recover re-admits
+    assert all(sum(r["rows_completed"]) == 64 for r in recs)
+
+
+def test_kill_then_recover_converges_back_to_oracle():
+    plan = FaultPlan().kill(0, at=6).recover(0, at=10)
+    sched, inj, _ = make_sim(plan=plan, per_row_s=0.0004)
+    drive(sched, inj, {"x": np.zeros((128, 4), np.float32)}, 30)
+    # 3:1 skew: the fast group's share returns to the 0.75 oracle
+    assert sched.shares[0] == pytest.approx(0.75, abs=0.05)
+    assert list(sched.live) == [True, True]
+
+
+def test_all_groups_failing_raises():
+    sched, inj, _ = make_sim(plan=FaultPlan().kill(0, at=0).kill(1, at=0))
+    inj.tick()
+    with pytest.raises(RuntimeError, match="failed"):
+        sched.step(BATCH)
+
+
+def test_slow_fault_shifts_shares_away_from_straggler():
+    plan = FaultPlan().slow(0, at=5, factor=12.0)
+    sched, inj, _ = make_sim(plan=plan, skew=1, per_row_s=0.0004)
+    drive(sched, inj, {"x": np.zeros((128, 4), np.float32)}, 25)
+    # equal groups, then group 0 degrades 12x: its share collapses
+    assert sched.shares[0] < 0.2, sched.shares
+    assert list(sched.live) == [True, True]       # slow is not dead
+
+
+def test_combined_kill_and_slow_faults():
+    groups = three_equal_groups()
+    plan = FaultPlan().slow(1, at=3, factor=6.0).kill(2, at=5)
+    sched, inj, _ = make_sim(groups, plan=plan, per_row_s=0.0004)
+    recs = drive(sched, inj, {"x": np.zeros((96, 4), np.float32)}, 20)
+    assert recs[-1]["live"] == [True, True, False]
+    assert all(sum(r["rows_completed"]) == 96 for r in recs)
+    # group 0 (healthy) ends with the dominant share over slowed group 1
+    assert sched.shares[0] > sched.shares[1] > 0
+    assert sched.shares[2] == 0.0
+
+
+def test_cascading_kills_leave_last_group_serving():
+    groups = three_equal_groups()
+    plan = FaultPlan().kill(0, at=2).kill(1, at=4)
+    sched, inj, _ = make_sim(groups, plan=plan)
+    recs = drive(sched, inj, {"x": np.zeros((96, 4), np.float32)}, 7)
+    assert recs[-1]["live"] == [False, False, True]
+    assert recs[-1]["rows_completed"] == [0, 0, 96]
+    assert all(sum(r["rows_completed"]) == 96 for r in recs)
+
+
+def test_failure_step_skips_controller_update():
+    groups = three_equal_groups()
+    sched, inj, _ = make_sim(groups, plan=FaultPlan().kill(2, at=3))
+    batch = {"x": np.zeros((96, 4), np.float32)}
+    drive(sched, inj, batch, 3)
+    ratio_before = sched.shares[0] / sched.shares[1]
+    inj.tick()
+    sched.step(batch)                             # the kill step
+    # survivors renormalize but the EWMA must not move on tainted times
+    assert sched.shares[0] / sched.shares[1] == pytest.approx(ratio_before)
+
+
+def test_dispatch_timeout_demotes_hung_group():
+    release = threading.Event()
+
+    class HangingResult:
+        def block_until_ready(self):
+            release.wait()                        # hung until test cleanup
+
+    armed = {"on": False}
+
+    def builder(group):
+        def fn(chunk):
+            if group.name == "fast" and armed["on"]:
+                return HangingResult()
+            return chunk["x"]
+        return fn
+
+    sched = ChunkedScheduler(builder, sim_skew_groups(),
+                             controller=EwmaController(2, min_share=0.02),
+                             dispatch_timeout_s=0.05)
+    try:
+        rec = sched.step(BATCH, rebalance=False)
+        assert not rec["failures"]
+        armed["on"] = True
+        rec = sched.step(BATCH, rebalance=False)
+        assert "fast" in rec["failures"]
+        assert "timed out" in rec["failures"]["fast"]
+        assert rec["rows_completed"] == [0, 64]   # orphans re-dispatched
+        assert list(sched.live) == [False, True]
+    finally:
+        release.set()                             # unblock the worker
+        sched.close()
+
+
+def test_fault_trajectories_are_deterministic():
+    def run():
+        plan = (FaultPlan().slow(1, at=2, factor=4.0).kill(0, at=5)
+                .recover(0, at=9).recover(1, at=9))
+        sched, inj, clock = make_sim(plan=plan)
+        recs = drive(sched, inj, BATCH, 14)
+        return ([r["t_step"] for r in recs], [r["rows"] for r in recs],
+                [r["live"] for r in recs], clock.now())
+
+    assert run() == run()                         # bit-identical replays
+
+
+# -- KillSwitch state machine ---------------------------------------------------
+
+def test_killswitch_warms_up_then_trips_after_patience():
+    ks = KillSwitch(threshold=1.5, patience=3, min_samples=4)
+    assert all(ks.observe(1.0) == "ok" for _ in range(4))
+    assert ks.baseline == pytest.approx(1.0)
+    assert ks.observe(2.0) == "regressing"
+    assert ks.observe(2.0) == "regressing"
+    assert ks.observe(2.0) == "trip"
+    assert ks.tripped and ks.n_trips == 1
+
+
+def test_killswitch_healthy_step_resets_streak():
+    ks = KillSwitch(threshold=1.5, patience=2, min_samples=2)
+    ks.observe(1.0), ks.observe(1.0)
+    assert ks.observe(2.0) == "regressing"
+    assert ks.observe(1.0) == "ok"                # streak broken
+    assert ks.observe(2.0) == "regressing"        # needs patience again
+    assert not ks.tripped
+
+
+def test_killswitch_rearms_after_cooldown_probes():
+    ks = KillSwitch(threshold=1.5, patience=1, cooldown=2, min_samples=2)
+    ks.observe(1.0), ks.observe(1.0)
+    assert ks.observe(5.0) == "trip"
+    assert ks.observe(1.0) == "cooling"
+    assert ks.observe(1.0) == "rearm"
+    assert not ks.tripped
+    assert ks.observe(1.0) == "ok"
+
+
+def test_killswitch_unhealthy_probe_restarts_cooldown():
+    ks = KillSwitch(threshold=1.5, patience=1, cooldown=2, min_samples=2)
+    ks.observe(1.0), ks.observe(1.0)
+    ks.observe(5.0)
+    assert ks.observe(1.0) == "cooling"
+    assert ks.observe(5.0) == "cooling"           # fallback still unhealthy
+    assert ks.tripped                             # ... so no re-arm yet
+    assert ks.observe(1.0) == "cooling"
+    assert ks.observe(1.0) == "rearm"
+
+
+def test_killswitch_regressions_never_enter_baseline():
+    # a slow regression must not drag the baseline up and evade the trip
+    ks = KillSwitch(threshold=1.5, patience=10, window=4, min_samples=2)
+    ks.observe(1.0), ks.observe(1.0)
+    for _ in range(8):
+        ks.observe(1.8)                           # regressing, not stored
+    assert ks.baseline == pytest.approx(1.0)
+
+
+def test_killswitch_reset_baseline_forgets_history():
+    ks = KillSwitch(min_samples=2)
+    ks.observe(1.0), ks.observe(1.0)
+    assert ks.baseline is not None
+    ks.reset_baseline()
+    assert ks.baseline is None
+    assert ks.observe(99.0) == "ok"               # no baseline, no verdict
+
+
+def test_killswitch_validates_parameters():
+    with pytest.raises(ValueError):
+        KillSwitch(threshold=0.9)
+    with pytest.raises(ValueError):
+        KillSwitch(patience=0)
+
+
+# -- ServeGuard -----------------------------------------------------------------
+
+class PoisonedController(EwmaController):
+    """Scripted controller regression: from step ``poison_from`` on it
+    pushes the shares to a fixed bad split — the failure mode the kill
+    switch exists for (plausible per-step behavior, bad trajectory)."""
+
+    def __init__(self, n, poison_from, bad, **kw):
+        super().__init__(n, **kw)
+        self.poison_from = poison_from
+        self.bad = np.asarray(bad, np.float64)
+        self.updates = 0
+
+    def update(self, times, rows=None):
+        self.updates += 1
+        if self.updates >= self.poison_from:
+            self.shares = self.bad.copy()
+            return self.shares
+        return super().update(times, rows=rows)
+
+
+def make_guarded(poison_from=8, fallback=(0.75, 0.25), **switch_kw):
+    clock = VirtualClock()
+    groups = sim_skew_groups(skew=3)
+    ctrl = PoisonedController(2, poison_from, [0.15, 0.85], min_share=0.02)
+    sched = ChunkedScheduler(make_serial_sim_builder(0.0005, clock=clock),
+                             groups, controller=ctrl, clock=clock)
+    kw = dict(threshold=1.5, patience=5, cooldown=3)
+    kw.update(switch_kw)
+    guard = ServeGuard(sched, switch=KillSwitch(**kw),
+                       fallback=None if fallback is None
+                       else np.asarray(fallback))
+    return guard, sched
+
+
+def test_guard_trips_within_patience_and_pins_fallback():
+    guard, sched = make_guarded()
+    recs = [guard.step(BATCH) for _ in range(20)]
+    verdicts = [r["guard"]["verdict"] for r in recs]
+    trip = verdicts.index("trip")
+    # exactly patience=5 consecutive regressing steps before the trip
+    assert verdicts[trip - 4:trip] == ["regressing"] * 4
+    healthy = recs[trip - 5]["t_step"]            # last pre-regression step
+    # fallback restores the known-good level within one step of the trip
+    assert recs[trip + 1]["t_step"] <= 1.10 * healthy
+    np.testing.assert_allclose(recs[trip + 1]["shares"], [0.75, 0.25])
+
+
+def test_guard_rearm_returns_control_to_controller():
+    guard, sched = make_guarded()
+    recs = [guard.step(BATCH) for _ in range(40)]
+    verdicts = [r["guard"]["verdict"] for r in recs]
+    assert "rearm" in verdicts
+    # the poisoned controller regresses again after re-arm -> re-trip
+    assert guard.switch.n_trips >= 2
+
+
+def test_guard_learns_fallback_when_none_given():
+    guard, sched = make_guarded(fallback=None)
+    recs = [guard.step(BATCH) for _ in range(20)]
+    trip = [r["guard"]["verdict"] for r in recs].index("trip")
+    pinned = recs[trip + 1]["shares"]
+    # the learned snapshot is the best split the controller visited —
+    # near the 3:1 oracle, nowhere near the poisoned [0.15, 0.85]
+    assert pinned[0] == pytest.approx(0.75, abs=0.05)
+
+
+def test_guard_membership_change_resets_baseline():
+    clock = VirtualClock()
+    groups = sim_skew_groups(skew=3)
+    plan = FaultPlan().kill(0, at=6)
+    inj = FaultInjector(plan, groups)
+    sched = ChunkedScheduler(
+        make_serial_sim_builder(0.0005, clock=clock, injector=inj),
+        groups, controller=EwmaController(2, min_share=0.02), clock=clock)
+    guard = ServeGuard(sched, switch=KillSwitch(threshold=1.3, patience=2))
+    inj.attach(guard)
+    recs = []
+    for _ in range(14):
+        inj.tick()
+        recs.append(guard.step(BATCH))
+    assert recs[6]["guard"]["verdict"] == "membership-change"
+    # survivor-only steps are ~3-4x slower, but the guard must NOT trip:
+    # the regression is a real capacity loss, not a controller failure
+    assert guard.switch.n_trips == 0
+    assert all(sum(r["rows_completed"]) == 64 for r in recs)
+
+
+def test_guard_projects_fallback_onto_live_membership():
+    guard, sched = make_guarded()
+    sched.controller.drop(0)
+    shares = guard._fallback_shares()
+    assert shares[0] == 0.0
+    assert shares[1] == pytest.approx(1.0)
+
+
+def test_fallback_from_store_resolves_tuned_fraction():
+    class Rec:
+        best_config = {"fraction": 70}
+
+    class Store:
+        def best_record(self, space, workload):
+            assert space == "stream_split"
+            return Rec()
+
+    np.testing.assert_allclose(fallback_from_store(Store(), {}),
+                               [0.7, 0.3])
+    assert fallback_from_store(None, {}) is None
+    assert fallback_from_store(Store(), {}, n_groups=3) is None
+
+
+# -- StreamingPipeline integration ----------------------------------------------
+
+def test_pipeline_with_guard_survives_kill_and_counts_rows():
+    clock = VirtualClock()
+    groups = sim_skew_groups(skew=3)
+    plan = FaultPlan().kill(0, at=5)
+    inj = FaultInjector(plan, groups)
+    pipe = StreamingPipeline(
+        make_serial_sim_builder(0.0005, clock=clock, injector=inj),
+        groups, controller=EwmaController(2, min_share=0.02),
+        clock=clock, guard=True)
+    inj.attach(pipe.guard)
+    for _ in range(12):
+        inj.tick()
+        pipe.run([BATCH])
+    s = pipe.summary()
+    assert s["batches"] == 12
+    assert s["rows_total"] == 12 * 64             # no lost rows, ever
+    assert s["live_final"] == [False, True]
+    assert s["failures"] == 1
+    assert s["guard_trips"] == 0                  # capacity loss != trip
+
+
+# -- sim / real dispatch agreement ----------------------------------------------
+
+def test_same_fault_plan_drives_sim_and_real_dispatch_identically():
+    """The acceptance criterion for the fault layer: one ``FaultPlan``
+    produces the same membership / completion trajectory against the
+    serial-device sim and against real sharded dispatch (8 forced host
+    devices, subprocess-isolated)."""
+    out = run_subprocess("""
+import numpy as np, jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.hetero import DeviceGroup
+from repro.runtime import (ChunkedScheduler, EwmaController, VirtualClock,
+                           make_serial_sim_builder)
+from repro.runtime.simulate import FaultInjector, FaultPlan
+
+def scripted_plan():
+    return (FaultPlan().transient(1, at=2).recover(1, at=3)
+            .kill(0, at=5).recover(0, at=8))
+
+def trajectory(sched, inj, steps=10):
+    batch = {"x": np.zeros((64, 16), np.float32)}
+    out = []
+    for _ in range(steps):
+        inj.tick()
+        rec = sched.step(batch)
+        out.append((rec["live"], sorted(rec["rows_completed"]),
+                    bool(rec["failures"])))
+        assert sum(rec["rows_completed"]) == 64
+    return out
+
+# -- sim side
+clock = VirtualClock()
+groups = [DeviceGroup("a", [object()] * 4), DeviceGroup("b", [object()] * 4)]
+inj = FaultInjector(scripted_plan(), groups)
+sched = ChunkedScheduler(
+    make_serial_sim_builder(0.0005, clock=clock, injector=inj), groups,
+    controller=EwmaController(2, min_share=0.02), clock=clock)
+inj.attach(sched)
+sim_traj = trajectory(sched, inj)
+
+# -- real side: the same plan wraps a jitted sharded step
+devs = jax.devices()
+rgroups = [DeviceGroup("a", devs[:4]), DeviceGroup("b", devs[4:])]
+rinj = FaultInjector(scripted_plan(), rgroups)
+
+def builder(group):
+    mesh = group.mesh()
+    sh = NamedSharding(mesh, P("data"))
+    f = jax.jit(lambda v: v.sum(axis=1), in_shardings=sh)
+    def fn(chunk):
+        return f(jax.device_put(chunk["x"], sh))
+    return fn
+
+rsched = ChunkedScheduler(rinj.wrap(builder), rgroups,
+                          controller=EwmaController(2, min_share=0.02))
+rinj.attach(rsched)
+real_traj = trajectory(rsched, rinj)
+
+# identical membership + failure trajectory; rows land per the live set
+assert [t[0] for t in sim_traj] == [t[0] for t in real_traj], (
+    sim_traj, real_traj)
+assert [t[2] for t in sim_traj] == [t[2] for t in real_traj]
+print("SIM_REAL_FAULT_OK")
+""")
+    assert "SIM_REAL_FAULT_OK" in out
+
+
+# -- property tests: controller invariants under arbitrary sequences ------------
+
+def _apply_ops(ctrl, rng, n_ops):
+    """Random interleaving of drop / restore / update ops; returns the
+    indices currently live."""
+    n = ctrl.n_groups
+    for _ in range(n_ops):
+        op = rng.integers(0, 3)
+        gi = int(rng.integers(0, n))
+        if op == 0:
+            if ctrl.live[gi] and ctrl.n_live > 1:
+                ctrl.drop(gi)
+        elif op == 1:
+            ctrl.restore(gi)
+        else:
+            ctrl.update(rng.uniform(0.1, 5.0, n))
+
+
+@settings(max_examples=40)
+@given(seed=st.integers(min_value=0, max_value=10**6))
+def test_property_shares_stay_on_simplex_under_drop_restore(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 6))
+    ctrl = EwmaController(n, min_share=0.02)
+    _apply_ops(ctrl, rng, n_ops=int(rng.integers(1, 30)))
+    assert ctrl.shares.sum() == pytest.approx(1.0)
+    assert ctrl.live.any()
+    for gi in range(n):
+        if ctrl.live[gi]:
+            assert ctrl.shares[gi] >= ctrl.min_share - 1e-12
+        else:
+            assert ctrl.shares[gi] == 0.0         # exactly, not approximately
+
+
+@settings(max_examples=25)
+@given(seed=st.integers(min_value=0, max_value=10**6))
+def test_property_plan_never_assigns_rows_to_dropped_group(seed):
+    rng = np.random.default_rng(seed)
+    groups = three_equal_groups()
+    sched, inj, _ = make_sim(groups)
+    _apply_ops(sched.controller, rng, n_ops=int(rng.integers(1, 20)))
+    n = int(rng.integers(3, 17)) * 12             # >= one row per device
+    rows = sched.plan_rows(n)
+    assert sum(rows) == n
+    for gi in range(3):
+        if not sched.controller.live[gi]:
+            assert rows[gi] == 0
+        else:
+            assert rows[gi] >= len(groups[gi].devices)
+    # and a real step honors the plan: no dispatch on dead groups
+    rec = sched.step({"x": np.zeros((n, 4), np.float32)}, rebalance=False)
+    for gi in range(3):
+        if not sched.controller.live[gi]:
+            assert rec["rows_completed"][gi] == 0

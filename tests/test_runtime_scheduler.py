@@ -10,7 +10,7 @@ from helpers import (SimReadyAt, make_serial_sim_builder, run_subprocess,
 
 from repro.core.hetero import proportional_rebalance
 from repro.runtime import (ChunkedScheduler, EwmaController, StreamingPipeline,
-                           dna_stream_builder, ewma_rebalance)
+                           VirtualClock, dna_stream_builder, ewma_rebalance)
 
 sim_groups = sim_skew_groups
 
@@ -101,14 +101,17 @@ def test_chunks_cover_batch_in_order():
 def test_online_converges_to_oracle_within_20_steps():
     """2 groups, 3:1 per-row speed skew: the online scheduler's
     steady-state step time reaches within 10% of the oracle static
-    split's step time in <= 20 steps."""
+    split's step time in <= 20 steps.  Runs on a virtual clock, so the
+    trajectory is an exact function of the timing model — bit-identical
+    on any machine, nothing sleeps."""
     batch = {"x": np.zeros((128, 4), np.float32)}
 
     def run(shares, steps, rebalance):
+        clock = VirtualClock()
         sched = ChunkedScheduler(
-            make_serial_sim_builder(0.0004), sim_groups(),
+            make_serial_sim_builder(0.0004, clock=clock), sim_groups(),
             controller=EwmaController(2, shares=np.asarray(shares),
-                                      min_share=0.02))
+                                      min_share=0.02), clock=clock)
         recs = [sched.step(batch, rebalance=rebalance)
                 for _ in range(steps)]
         return sched, recs
@@ -128,10 +131,11 @@ def test_convergence_is_group_order_independent():
     it happens — blocking group-by-group would measure a later-indexed
     fast group as slow as the slow group and never rebalance."""
     batch = {"x": np.zeros((128, 4), np.float32)}
+    clock = VirtualClock()
     sched = ChunkedScheduler(
-        make_serial_sim_builder(0.0004),
+        make_serial_sim_builder(0.0004, clock=clock),
         sim_groups(skew=3, fast_first=False),          # slow group first
-        controller=EwmaController(2, min_share=0.02))
+        controller=EwmaController(2, min_share=0.02), clock=clock)
     for _ in range(20):
         sched.step(batch)
     # group 0 is the 3x-slower one -> its share must shrink toward 0.25
@@ -197,9 +201,10 @@ def test_variable_batch_sizes_still_rebalance():
     """Regression: plans cache per batch size — a stream alternating
     between sizes must not mark every step as a plan change (which
     would suppress the controller update and freeze the shares)."""
+    clock = VirtualClock()
     sched = ChunkedScheduler(
-        make_serial_sim_builder(0.0004), sim_groups(skew=3),
-        controller=EwmaController(2, min_share=0.02))
+        make_serial_sim_builder(0.0004, clock=clock), sim_groups(skew=3),
+        controller=EwmaController(2, min_share=0.02), clock=clock)
     batches = [{"x": np.zeros((n, 4), np.float32)} for n in (128, 96)]
     for i in range(24):
         sched.step(batches[i % 2])
