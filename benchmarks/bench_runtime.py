@@ -360,6 +360,9 @@ def main() -> None:
                     help="run the degraded/kill-switch resilience "
                     "sections (always on in full runs)")
     ap.add_argument("--out", default=str(ROOT / "BENCH_runtime.json"))
+    ap.add_argument("--date", default=None,
+                    help="wall date stamped into the meta block (CI passes "
+                         "it; defaults to the BENCH_DATE env var, else null)")
     args = ap.parse_args()
 
     t0 = time.perf_counter()
@@ -385,6 +388,8 @@ def main() -> None:
             results["real_dispatch"]
     results["smoke"] = bool(args.smoke)
     results["wall_s"] = round(time.perf_counter() - t0, 3)
+    from repro.obs.provenance import build_meta
+    results["meta"] = build_meta(args.date)
 
     out = Path(args.out)
     out.write_text(json.dumps(results, indent=1) + "\n")

@@ -8,7 +8,12 @@ trajectory the stand-alone benches (``bench_search.py``,
 ``bench_runtime.py``) already follow.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig2_motivation,...]
-                                            [--json]
+                                            [--json] [--date 2026-08-07]
+
+``--json`` artifacts carry a ``meta`` provenance block (git SHA, jax
+version, device topology — ``repro.obs.provenance.build_meta``); the
+wall date comes only from ``--date`` / the ``BENCH_DATE`` env var (CI
+passes it), never the system clock, so re-runs stay byte-reproducible.
 """
 
 from __future__ import annotations
@@ -53,7 +58,14 @@ def main() -> None:
                     help="comma-separated benchmark names")
     ap.add_argument("--json", action="store_true",
                     help="also write BENCH_<name>.json at the repo root")
+    ap.add_argument("--date", default=None,
+                    help="wall date stamped into the meta block (CI passes "
+                         "it; defaults to the BENCH_DATE env var, else null)")
     args = ap.parse_args()
+    meta = None
+    if args.json:
+        from repro.obs.provenance import build_meta
+        meta = build_meta(args.date)
     selected = set(args.only.split(",")) if args.only else None
     RESULTS.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
@@ -75,6 +87,7 @@ def main() -> None:
                 "name": name,
                 "wall_s": round(us / 1e6, 6),
                 "derived": derived,
+                "meta": meta,
                 "rows": rows,
             }, indent=1, default=str) + "\n")
 

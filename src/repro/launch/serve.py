@@ -12,6 +12,14 @@ second group), and the EWMA controller adapts the split per request mix.
 Pallas kernels resolve their cached best launch parameters (tuned via
 ``repro.tune.kernels`` / ``benchmarks/bench_kernels.py``) per traced
 shape, with zero measurements at serve time.
+
+Observability (``repro.obs``): ``--trace-out`` / ``--journal-out`` /
+``--metrics-out`` record a ``--stream`` run — a Chrome-loadable span
+trace, the decision journal (JSONL), and an ``obs_summary.json``.
+``--fault-plan "kill:0@3,slow:1@9:4"`` replays a scripted failure drill
+against the simulated serial-device groups on a ``VirtualClock`` (no
+model build, deterministic timestamps) — the CI obs-smoke job validates
+its artifacts against ``docs/obs_schema.json``.
 """
 
 from __future__ import annotations
@@ -29,8 +37,11 @@ from ..core.hetero import DeviceGroup
 from ..dist.api import use_rules
 from ..dist.sharding import ShardingConfig
 from ..models import build_model
+from ..obs import get_logger
 from .mesh import make_host_mesh, set_mesh
 from . import steps
+
+log = get_logger("repro.serve")
 
 
 def serve_session(cfg, *, batch: int, prompt_len: int, gen: int,
@@ -198,7 +209,8 @@ def serve_stream(cfg, *, groups: list[DeviceGroup], n_batches: int = 4,
                  seed: int = 0, chunks_per_group: int = 2,
                  row_quantum: int = 2, controller=None,
                  initial_shares=None, model=None,
-                 step_builder=None, guard=None) -> dict:
+                 step_builder=None, guard=None, observer=None,
+                 clock=None, injector=None) -> dict:
     """Adaptive serving: chunk-schedule request batches across groups.
 
     Each group holds its own (replicated) copy of the params and runs
@@ -215,6 +227,13 @@ def serve_stream(cfg, *, groups: list[DeviceGroup], n_batches: int = 4,
     online trajectory regresses, the split pins to the last known-good
     static configuration until a cool-down probe passes
     (``docs/resilience.md``).
+
+    ``observer`` (``repro.obs.Observer``) records the run; ``clock``
+    passes through to the scheduler (share it with the observer and a
+    sim ``step_builder`` for deterministic traces); ``injector`` (a
+    ``repro.runtime.FaultInjector``) is ticked once per batch and
+    attached so recover events restore membership — the fault-drill
+    surface behind ``--fault-plan``.
     """
     from ..runtime import EwmaController, StreamingPipeline
 
@@ -235,12 +254,23 @@ def serve_stream(cfg, *, groups: list[DeviceGroup], n_batches: int = 4,
 
     pipeline = StreamingPipeline(
         step_builder, groups, chunks_per_group=chunks_per_group,
-        row_quantum=row_quantum, controller=controller, guard=guard)
+        row_quantum=row_quantum, controller=controller, guard=guard,
+        clock=clock, observer=observer)
     rng = np.random.default_rng(seed)
     batches = [{"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)}
         for _ in range(n_batches)]
-    records = pipeline.run(batches)
+    if injector is not None:
+        # route recover events through the membership surface, and feed
+        # the scripted plan one scheduler step at a time
+        injector.attach(pipeline.guard if pipeline.guard is not None
+                        else pipeline.scheduler)
+        records = []
+        for b in batches:
+            injector.tick()
+            records.extend(pipeline.run([b]))
+    else:
+        records = pipeline.run(batches)
     summary = pipeline.summary()
     summary["tokens_per_s_mean"] = summary["rows_per_s_mean"] * gen
     return {"records": records, "summary": summary}
@@ -286,7 +316,31 @@ def main() -> None:
                     "repro.tune.kernels.tune_kernel / bench_kernels.py); "
                     "Pallas kernels resolve their cached best launch "
                     "params for each traced shape, defaults on a miss")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a chrome://tracing span trace of the "
+                    "--stream run (repro.obs)")
+    ap.add_argument("--journal-out", default=None, metavar="PATH",
+                    help="write the decision journal (JSONL) of the "
+                    "--stream run")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write obs_summary.json (counters, latency "
+                    "percentiles, journal digest, provenance meta)")
+    ap.add_argument("--log-level", default=None,
+                    choices=["debug", "info", "warning", "error"],
+                    help="filter the structured log (default info; also "
+                    "REPRO_LOG_LEVEL)")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="scripted failure drill for --stream, e.g. "
+                    "'kill:0@3,slow:1@9:4' — runs against simulated "
+                    "serial groups on a virtual clock (no model build); "
+                    "see repro.runtime.parse_fault_plan")
+    ap.add_argument("--sim-devices", type=int, default=8,
+                    help="device count of the simulated groups under "
+                    "--fault-plan")
     args = ap.parse_args()
+    from ..obs import Observer, configure
+    if args.log_level:
+        configure(level=args.log_level)
     cfg = configs.get(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
@@ -300,20 +354,49 @@ def main() -> None:
         from ..tune import kernels as ktune
         ktune.configure(args.tuned_kernels)
     if args.stream:
-        # the scheduler needs >= 1 request row per device: on small
-        # --batch runs use only as many devices as there are rows
-        devs = jax.devices()[:max(args.batch, 1)]
+        clock = injector = observer = None
+        if args.fault_plan:
+            if args.tune_split:
+                ap.error("--fault-plan is a simulated drill; it cannot "
+                         "combine with --tune-split")
+            from ..runtime.simulate import (FakeDevice, FaultInjector,
+                                            VirtualClock,
+                                            make_serial_sim_builder,
+                                            parse_fault_plan)
+            # the drill runs against simulated serial groups on a
+            # virtual clock: no model, no compile, and every timestamp
+            # in the trace/journal is a deterministic simulated instant
+            clock = VirtualClock()
+            devs = [FakeDevice()
+                    for _ in range(min(args.sim_devices,
+                                       max(args.batch, 1)))]
+        else:
+            # the scheduler needs >= 1 request row per device: on small
+            # --batch runs use only as many devices as there are rows
+            devs = jax.devices()[:max(args.batch, 1)]
         if 0 < args.slow < len(devs):
             groups = [DeviceGroup("fast", devs[:-args.slow]),
                       DeviceGroup("slow", devs[-args.slow:])]
         else:
             groups = [DeviceGroup("all", devs)]
+        if args.trace_out or args.journal_out or args.metrics_out:
+            observer = Observer(clock=clock)
+            # mirror every narrated line into the decision journal, so
+            # the narration and the decisions land on one sequence
+            configure(journal=observer.journal)
         initial_shares = None
-        # one memoized builder: the split tuner and the serving pipeline
-        # share per-group params init + jitted prefill/decode
-        builder = _memoize_per_group(_stream_step_builder(
-            build_model(cfg), prompt_len=args.prompt_len, gen=args.gen,
-            seed=0))
+        if args.fault_plan:
+            injector = FaultInjector(parse_fault_plan(args.fault_plan),
+                                     groups)
+            builder = make_serial_sim_builder(1e-3, clock=clock,
+                                              injector=injector)
+        else:
+            # one memoized builder: the split tuner and the serving
+            # pipeline share per-group params init + jitted
+            # prefill/decode
+            builder = _memoize_per_group(_stream_step_builder(
+                build_model(cfg), prompt_len=args.prompt_len, gen=args.gen,
+                seed=0))
         if args.tune_split:
             if len(groups) != 2:
                 ap.error("--tune-split needs two groups (pass --slow N)")
@@ -322,9 +405,9 @@ def main() -> None:
                 prompt_len=args.prompt_len, gen=args.gen,
                 strategy=args.tune_strategy, store=args.tune_store,
                 step_builder=builder)
-            print(f"tuned split: {initial_shares.round(2)} "
-                  f"({tuned.strategy}, {tuned.n_experiments} measurements"
-                  f"{', cached' if tuned.from_cache else ''})")
+            log.info(f"tuned split: {initial_shares.round(2)} "
+                     f"({tuned.strategy}, {tuned.n_experiments} measurements"
+                     f"{', cached' if tuned.from_cache else ''})")
         guard = None
         if args.guard:
             from ..runtime import KillSwitch, ServeGuard
@@ -338,18 +421,33 @@ def main() -> None:
         out = serve_stream(cfg, groups=groups, n_batches=args.stream_batches,
                            batch=args.batch, prompt_len=args.prompt_len,
                            gen=args.gen, initial_shares=initial_shares,
-                           step_builder=builder, guard=guard)
+                           step_builder=builder, guard=guard,
+                           observer=observer, clock=clock,
+                           injector=injector)
         s = out["summary"]
         guarded = f"  guard trips {s['guard_trips']}" if args.guard else ""
-        print(f"stream: {s['batches']} batches  "
-              f"{s['tokens_per_s_mean']:.1f} tok/s  "
-              f"shares {s['shares_final']}{guarded}")
+        log.info(f"stream: {s['batches']} batches  "
+                 f"{s['tokens_per_s_mean']:.1f} tok/s  "
+                 f"shares {s['shares_final']}{guarded}")
+        if observer is not None:
+            if args.trace_out:
+                path = observer.save_trace(args.trace_out)
+                log.info(f"trace: {path} ({len(observer.tracer)} events)")
+            if args.journal_out:
+                path = observer.save_journal(args.journal_out)
+                log.info(f"journal: {path} "
+                         f"({len(observer.journal)} events)")
+            if args.metrics_out:
+                observer.write_summary(args.metrics_out,
+                                       extra={"stream": s})
+                log.info(f"metrics: {args.metrics_out}")
         return
     out = serve_session(cfg, batch=args.batch, prompt_len=args.prompt_len,
                         gen=args.gen)
-    print(f"prefill {out['prefill_s']:.2f}s  decode {out['decode_s']:.2f}s  "
-          f"{out['tokens_per_s']:.1f} tok/s")
-    print("sample tokens:", out["generated"][0, :12])
+    log.info(f"prefill {out['prefill_s']:.2f}s  "
+             f"decode {out['decode_s']:.2f}s  "
+             f"{out['tokens_per_s']:.1f} tok/s")
+    log.info(f"sample tokens: {out['generated'][0, :12]}")
 
 
 if __name__ == "__main__":

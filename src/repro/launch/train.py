@@ -26,10 +26,13 @@ from ..data.pipeline import DataConfig, SyntheticPipeline
 from ..dist.api import use_rules
 from ..dist.sharding import ShardingConfig
 from ..models import build_model
+from ..obs import get_logger
 from ..optim.adamw import AdamWConfig, init_opt_state
 from ..optim.schedule import warmup_cosine
 from . import shapes, steps
 from .mesh import make_host_mesh, set_mesh
+
+log = get_logger("repro.train")
 
 
 def make_data_cfg(cfg, batch: int, seq_len: int, seed: int = 0) -> DataConfig:
@@ -74,9 +77,10 @@ def train_loop(cfg, *, steps_total: int, batch: int, seq_len: int,
                 resumed_from = start_step
                 restored = True
             except Exception as e:  # noqa: BLE001 — incompatible checkpoint
-                print(f"WARNING: checkpoint in {ckpt_dir} is incompatible "
-                      f"with this model ({type(e).__name__}); starting "
-                      "fresh", flush=True)
+                log.warning(f"WARNING: checkpoint in {ckpt_dir} is "
+                            f"incompatible with this model "
+                            f"({type(e).__name__}); starting fresh",
+                            ckpt_dir=str(ckpt_dir), error=type(e).__name__)
         if not restored:
             with use_rules(bundle.rules):
                 params = jax.jit(
@@ -114,9 +118,11 @@ def train_loop(cfg, *, steps_total: int, batch: int, seq_len: int,
                     losses.append(loss)
                     if log_every and step % log_every == 0:
                         dt = time.time() - t0
-                        print(f"step {step:5d}  loss {loss:7.4f}  "
-                              f"gnorm {float(metrics['gnorm']):7.3f}  "
-                              f"{dt:6.1f}s", flush=True)
+                        log.info(f"step {step:5d}  loss {loss:7.4f}  "
+                                 f"gnorm {float(metrics['gnorm']):7.3f}  "
+                                 f"{dt:6.1f}s",
+                                 step=step, loss=loss,
+                                 gnorm=float(metrics["gnorm"]))
                     if mgr and ckpt_every and (step + 1) % ckpt_every == 0:
                         mgr.save(step + 1, state, extra={"loss": loss})
         except BaseException:
@@ -152,8 +158,9 @@ def main() -> None:
     out = train_loop(cfg, steps_total=args.steps, batch=args.batch,
                      seq_len=args.seq_len, ckpt_dir=args.ckpt_dir,
                      ckpt_every=args.ckpt_every, seed=args.seed)
-    print(f"final loss: {out['final_loss']:.4f} "
-          f"(first: {out['losses'][0]:.4f})")
+    log.info(f"final loss: {out['final_loss']:.4f} "
+             f"(first: {out['losses'][0]:.4f})",
+             final_loss=out["final_loss"], first_loss=out["losses"][0])
 
 
 if __name__ == "__main__":

@@ -1,0 +1,72 @@
+"""Run provenance: who/what/where produced a result artifact.
+
+Every ``BENCH_*.json`` and ``obs_summary.json`` should answer "which
+commit, which jax, which devices, when" without forensic work —
+otherwise the bench trajectory across PRs compares apples to unknowns.
+:func:`build_meta` collects the answer cheaply and degrades gracefully
+(missing git, no devices yet) so it can run anywhere from CI to a
+laptop without adding dependencies.
+
+The wall date is deliberately **not** read from the system clock by
+default: benches must stay reproducible byte-for-byte on re-runs.  CI
+passes it explicitly (``--date`` flags / ``BENCH_DATE`` env var).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+from pathlib import Path
+
+__all__ = ["build_meta", "git_sha"]
+
+_REPO_ROOT = Path(__file__).resolve().parents[3]
+
+
+def git_sha(root: Path | None = None) -> str | None:
+    """The current commit SHA, or None outside a git checkout.
+
+    CI environments expose it as an env var (``GITHUB_SHA``) even on
+    shallow/detached checkouts, so that wins over asking git.
+    """
+    for var in ("GITHUB_SHA", "GIT_SHA", "CI_COMMIT_SHA"):
+        sha = os.environ.get(var)
+        if sha:
+            return sha
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=root or _REPO_ROOT,
+            capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def _device_topology() -> list[list] | None:
+    """(platform, kind, count) summary — None when jax will not init."""
+    try:
+        from ..runtime.store import device_topology
+        return device_topology()
+    except Exception:       # noqa: BLE001 — provenance must never crash a run
+        return None
+
+
+def build_meta(date: str | None = None, *, devices: bool = True) -> dict:
+    """The ``meta`` block stamped into result artifacts.
+
+    ``date`` is the CI-supplied wall date (falls back to the
+    ``BENCH_DATE`` env var, then None — never the system clock, see
+    module docstring).  ``devices=False`` skips the jax device query
+    for callers that must not initialize a backend.
+    """
+    import jax
+
+    return {
+        "git_sha": git_sha(),
+        "jax": jax.__version__,
+        # default_backend() initializes the platform — only touch it when
+        # the caller allows the device query at all
+        "backend": jax.default_backend() if devices else None,
+        "devices": _device_topology() if devices else None,
+        "date": date or os.environ.get("BENCH_DATE"),
+    }

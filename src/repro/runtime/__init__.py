@@ -48,7 +48,8 @@ from .feedback import OnlineSurrogateLoop
 from .guard import KillSwitch, ServeGuard, fallback_from_store
 from .scheduler import ChunkedScheduler, EwmaController, ewma_rebalance
 from .simulate import (FaultInjector, FaultPlan, GroupFailure, VirtualClock,
-                       make_serial_sim_builder, sim_skew_groups)
+                       make_serial_sim_builder, parse_fault_plan,
+                       sim_skew_groups)
 from .store import TuningStore, space_fingerprint, workload_signature
 from .stream import StreamingPipeline, dna_stream_builder
 
@@ -56,7 +57,7 @@ __all__ = [
     "ChunkedScheduler", "EwmaController", "ewma_rebalance",
     "KillSwitch", "ServeGuard", "fallback_from_store",
     "FaultInjector", "FaultPlan", "GroupFailure", "VirtualClock",
-    "make_serial_sim_builder", "sim_skew_groups",
+    "make_serial_sim_builder", "parse_fault_plan", "sim_skew_groups",
     "OnlineSurrogateLoop",
     "TuningStore", "space_fingerprint", "workload_signature",
     "StreamingPipeline", "dna_stream_builder",

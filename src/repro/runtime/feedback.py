@@ -40,6 +40,7 @@ import numpy as np
 
 from ..core.bdtr import BinnedFeatures, append_rows, bin_features
 from ..core.evaluators import SurrogatePair
+from ..obs import as_observer
 
 __all__ = ["OnlineSurrogateLoop"]
 
@@ -88,7 +89,7 @@ class OnlineSurrogateLoop:
 
     def __init__(self, surrogate: SurrogatePair, *, refit_every: int = 32,
                  n_new_trees: int = 20, max_observations: int = 8192,
-                 max_trees: int = 512):
+                 max_trees: int = 512, observer=None):
         """``refit_every`` observations trigger a refit on the next
         ``observe`` (or call ``refit(force=True)`` yourself);
         ``n_new_trees`` is the boosting budget per side per refit;
@@ -107,6 +108,7 @@ class OnlineSurrogateLoop:
         self._device = _SideState(surrogate.device)
         self._since_refit = 0
         self.n_refits = 0
+        self._obs = as_observer(observer)
 
     # -- observations -------------------------------------------------------
     @property
@@ -149,6 +151,8 @@ class OnlineSurrogateLoop:
         """
         if not force and self._since_refit < self.refit_every:
             return False
+        token = self._obs.tracer.begin("surrogate.refit") \
+            if self._obs is not None else None
         ran = False
         for side in (self._host, self._device):
             if len(side.y) >= 2 * side.model.min_samples_leaf:
@@ -157,6 +161,15 @@ class OnlineSurrogateLoop:
         if ran:
             self._since_refit = 0
             self.n_refits += 1
+        if self._obs is not None:
+            self._obs.tracer.end(token, args={"ran": ran})
+            if ran:
+                self._obs.metrics.counter("surrogate.refits").inc()
+                self._obs.journal.event(
+                    "surrogate_refit", n_refits=self.n_refits,
+                    n_observations=self.n_observations,
+                    n_trees=[len(self._host.model.trees_),
+                             len(self._device.model.trees_)])
         return ran
 
     # -- the unified tuning facade ------------------------------------------

@@ -39,6 +39,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..obs import as_observer
 from .scheduler import ChunkedScheduler, _project_simplex_floor
 
 __all__ = ["KillSwitch", "ServeGuard", "fallback_from_store"]
@@ -172,6 +173,7 @@ class ServeGuard:
     scheduler: ChunkedScheduler | None
     switch: KillSwitch = field(default_factory=KillSwitch)
     fallback: np.ndarray | None = None
+    observer: object = field(default=None, repr=False)
 
     def __post_init__(self):
         # scheduler may be None at construction (StreamingPipeline binds
@@ -184,6 +186,13 @@ class ServeGuard:
                                  "per group")
         self._best_shares: np.ndarray | None = None
         self._best_t: float = float("inf")
+        # inherit the scheduler's observer unless one was given: the
+        # guard's journal events must interleave with the scheduler's
+        # (demotion -> re-dispatch -> trip) on one sequence
+        self._obs = as_observer(self.observer)
+        if self._obs is None and self.scheduler is not None:
+            self._obs = self.scheduler._obs
+        self._armed_logged = False
 
     # -- membership passthrough (so a FaultInjector can attach the guard)
     def drop_group(self, i: int) -> None:
@@ -213,6 +222,12 @@ class ServeGuard:
 
     def step(self, batch: dict) -> dict:
         ctrl = self.scheduler.controller
+        if self._obs is not None and not self._armed_logged:
+            self._armed_logged = True
+            self._obs.journal.event(
+                "killswitch_armed", threshold=self.switch.threshold,
+                patience=self.switch.patience, window=self.switch.window,
+                cooldown=self.switch.cooldown)
         live_before = ctrl.live.copy()
         if self.switch.tripped:
             ctrl.shares = self._fallback_shares()
@@ -224,6 +239,13 @@ class ServeGuard:
             # step-time level changed, the old baseline is void (and the
             # failure step's own time is recovery-tainted — skip it)
             self.switch.reset_baseline()
+            if self._obs is not None:
+                self._obs.metrics.counter(
+                    "guard.verdict.membership-change").inc()
+                self._obs.journal.event(
+                    "guard_membership_change",
+                    live=[bool(x) for x in ctrl.live],
+                    tripped=self.switch.tripped)
             rec["guard"] = {"verdict": "membership-change",
                             "tripped": self.switch.tripped,
                             "baseline": None}
@@ -235,6 +257,22 @@ class ServeGuard:
             # degraded-mode split would be a bad fallback after repair)
             self._best_t = rec["t_step"]
             self._best_shares = rec["shares"].copy()
+        if self._obs is not None:
+            self._obs.metrics.counter(f"guard.verdict.{verdict}").inc()
+            if verdict == "trip":
+                self._obs.journal.event(
+                    "killswitch_tripped", t_step=round(rec["t_step"], 9),
+                    baseline=self.switch.baseline, n_trips=self.switch.n_trips,
+                    fallback=[round(float(s), 6)
+                              for s in self._fallback_shares()])
+                self._obs.tracer.instant(
+                    "killswitch.trip", tid=ctrl.n_groups,
+                    args={"t_step": round(rec["t_step"], 9)})
+            elif verdict == "rearm":
+                self._obs.journal.event(
+                    "killswitch_rearmed", baseline=self.switch.baseline)
+                self._obs.tracer.instant("killswitch.rearm",
+                                         tid=ctrl.n_groups)
         rec["guard"] = {"verdict": verdict, "tripped": self.switch.tripped,
                         "baseline": self.switch.baseline}
         return rec

@@ -42,6 +42,7 @@ import jax
 
 from ..core.hetero import DeviceGroup, result_ready_time
 from ..dist.api import constrain_leading
+from ..obs import as_observer
 
 __all__ = ["ChunkedScheduler", "EwmaController", "ewma_rebalance"]
 
@@ -99,8 +100,12 @@ class EwmaController:
     min_share: float = 0.01
     shares: np.ndarray = field(default=None)  # type: ignore[assignment]
     live: np.ndarray = field(default=None)    # type: ignore[assignment]
+    observer: object = field(default=None, repr=False)
 
     def __post_init__(self):
+        # normalize once: disabled observers become None so every
+        # per-update check is a single `is not None`
+        self.observer = as_observer(self.observer)
         if self.n_groups < 1:
             raise ValueError("need at least one group")
         if self.live is None:
@@ -172,6 +177,7 @@ class EwmaController:
         if live.all():
             self.shares = ewma_rebalance(self.shares, times, self.damping,
                                          self.min_share, rows=rows)
+            self._observe_update()
             return self.shares
         sub_rows = None if rows is None else np.asarray(rows)[live]
         sub = ewma_rebalance(self.shares[live] / self.shares[live].sum(),
@@ -180,7 +186,16 @@ class EwmaController:
         out = np.zeros(self.n_groups)
         out[live] = sub
         self.shares = out
+        self._observe_update()
         return self.shares
+
+    def _observe_update(self) -> None:
+        if self.observer is None:
+            return
+        m = self.observer.metrics
+        m.counter("controller.updates").inc()
+        for i, s in enumerate(self.shares):
+            m.gauge(f"controller.share.g{i}").set(round(float(s), 6))
 
 
 class ChunkedScheduler:
@@ -193,7 +208,8 @@ class ChunkedScheduler:
                  controller: EwmaController | None = None,
                  chunks_per_group: int = 2, inflight: int = 2,
                  row_quantum: int = 1, clock=None,
-                 dispatch_timeout_s: float | None = None):
+                 dispatch_timeout_s: float | None = None,
+                 observer=None):
         """``step_builder(group)`` returns ``fn(chunk) -> result`` exactly
         as for ``HeterogeneousRunner`` (results block via
         ``block_until_ready`` leaves).  ``chunks_per_group`` bounds how
@@ -210,7 +226,15 @@ class ChunkedScheduler:
         ``runtime.simulate.VirtualClock``) replaces the wall clock for
         deterministic simulated trajectories.  ``dispatch_timeout_s``
         bounds the drain wait per group and step: a group that exceeds
-        it is demoted exactly like one whose dispatch raised."""
+        it is demoted exactly like one whose dispatch raised.
+
+        ``observer`` (a ``repro.obs.Observer``, default off) records
+        dispatch/drain spans per group lane, plan-cache hit/miss
+        counters, a step-latency histogram, and the semantic decision
+        journal (rebalance adopted/debounced, demotion, re-dispatch).
+        Share the observer's clock with ``clock`` for deterministic
+        traces.  Every instrumentation block is guarded on the resolved
+        observer, so a disabled/absent one costs nothing per step."""
         if not groups:
             raise ValueError("need at least one device group")
         if chunks_per_group < 1 or inflight < 1 or row_quantum < 1:
@@ -228,6 +252,22 @@ class ChunkedScheduler:
         self._fns = [step_builder(g) for g in self.groups]
         self._plans: dict[tuple, dict] = {}  # (rows, membership) -> plan
         self.history: list[dict] = []
+        self._obs = as_observer(observer)
+        if self._obs is not None:
+            if self.controller.observer is None:
+                self.controller.observer = self._obs
+            m = self._obs.metrics
+            self._m_plan_hit = m.counter("scheduler.plan_cache_hits")
+            self._m_plan_miss = m.counter("scheduler.plan_cache_misses")
+            self._m_steps = m.counter("scheduler.steps")
+            self._m_rows = m.counter("scheduler.rows_completed")
+            self._m_redispatch = m.counter("scheduler.redispatched_rows")
+            self._h_step = m.histogram("scheduler.t_step_s")
+            # stable lanes: one per group (index, not OS thread id) plus
+            # a step lane — traces compare across runs and machines
+            for gi, g in enumerate(self.groups):
+                self._obs.tracer.thread_name(gi, f"group:{g.name}")
+            self._obs.tracer.thread_name(len(self.groups), "scheduler")
 
     @property
     def shares(self) -> np.ndarray:
@@ -242,16 +282,31 @@ class ChunkedScheduler:
             else time.perf_counter()
 
     # -- elastic membership ------------------------------------------------
-    def drop_group(self, i: int) -> None:
+    def drop_group(self, i: int, reason: str = "manual") -> None:
         """Remove group ``i`` from dispatch: its share goes to 0, the
         survivors re-normalize, and the next step plans (under a new
-        membership key — never a stale pre-drop plan) without it."""
+        membership key — never a stale pre-drop plan) without it.
+        ``reason`` lands in the decision journal (``group_demoted``)."""
+        was_live = bool(self.controller.live[i])
         self.controller.drop(i)
+        if self._obs is not None and was_live:
+            self._obs.journal.event(
+                "group_demoted", group=self.groups[i].name, index=i,
+                reason=reason, n_live=self.controller.n_live)
+            self._obs.tracer.instant("demote", tid=i,
+                                     args={"reason": reason})
 
     def restore_group(self, i: int, share: float | None = None) -> None:
         """Re-admit group ``i``; the EWMA wins its share back from live
         measurements within a few steps."""
+        was_live = bool(self.controller.live[i])
         self.controller.restore(i, share)
+        if self._obs is not None and not was_live:
+            self._obs.journal.event(
+                "group_restored", group=self.groups[i].name, index=i,
+                share=round(float(self.controller.shares[i]), 6),
+                n_live=self.controller.n_live)
+            self._obs.tracer.instant("restore", tid=i)
 
     def _live_key(self) -> int:
         return int(np.packbits(self.controller.live, bitorder="little")
@@ -335,15 +390,28 @@ class ChunkedScheduler:
         if plan is not None:
             if fresh == plan["rows"]:
                 plan["pending"] = None
+                if self._obs is not None:
+                    self._m_plan_hit.inc()
                 return plan["rows"], False
             if rebalance and plan["pending"] is None:
                 plan["pending"] = list(fresh)    # first deviation: debounce
+                if self._obs is not None:
+                    self._m_plan_hit.inc()
+                    self._obs.journal.event(
+                        "rebalance_debounced", batch=n,
+                        kept=list(plan["rows"]), deviating=list(fresh))
                 return plan["rows"], False
         if len(self._plans) >= 64 and key not in self._plans:
             self._plans.pop(next(iter(self._plans)))   # bound the cache
         self._plans[key] = {"rows": list(fresh), "pending": None,
                             "chunks": [self._chunk_sizes(r, len(g.devices))
                                        for r, g in zip(fresh, self.groups)]}
+        if self._obs is not None:
+            self._m_plan_miss.inc()
+            if plan is not None:
+                self._obs.journal.event(
+                    "rebalance_adopted", batch=n,
+                    old=list(plan["rows"]), new=list(fresh))
         # a replan of a known key is share-driven (possibly
         # compile-tainted measurement); a new key is just a new plan
         return self._plans[key]["rows"], plan is not None
@@ -485,6 +553,15 @@ class ChunkedScheduler:
             # real arrays are timestamped as their drain returns
             ready = result_ready_time(res)
             now = ready if ready is not None else self._now()
+            if self._obs is not None:
+                # one span per chunk on the group's lane, back-to-back
+                # from the group's first dispatch (timestamps come from
+                # the shared clock, so traces are deterministic even
+                # though this runs on a drain thread)
+                prev = chunk_times[gi][-1] if chunk_times[gi] else 0.0
+                self._obs.tracer.complete(
+                    "chunk", t_start[gi] + prev,
+                    (now - t_start[gi]) - prev, tid=gi, args={"rows": r})
             chunk_times[gi].append(now - t_start[gi])
             t_done[gi] = now - t_start[gi]
             t_done_abs[gi] = max(t_done_abs[gi], now - t0)
@@ -494,6 +571,9 @@ class ChunkedScheduler:
             failures[gi] = err if isinstance(err, str) \
                 else f"{type(err).__name__}: {err}"
             pending[gi].clear()           # unconfirmed results are orphaned
+            if self._obs is not None:
+                self._obs.tracer.instant("failure", tid=gi,
+                                         args={"error": failures[gi]})
 
         def drain_one(gi: int) -> bool:
             res, r, planned = pending[gi].popleft()
@@ -510,6 +590,9 @@ class ChunkedScheduler:
         def dispatch(gi: int, chunk, r: int, planned: bool) -> bool:
             if t_start[gi] is None:
                 t_start[gi] = self._now()
+            if self._obs is not None:
+                self._obs.tracer.instant("dispatch", tid=gi,
+                                         args={"rows": r})
             try:
                 res = self._fns[gi](chunk)
             except Exception as e:  # noqa: BLE001 — demotion boundary
@@ -565,7 +648,7 @@ class ChunkedScheduler:
                     if self.controller.n_live == 1:
                         raise RuntimeError(
                             f"all device groups failed: {failures}")
-                    self.drop_group(gi)
+                    self.drop_group(gi, reason=failures[gi])
                 orphans.extend(zip(chunks[gi][done_chunks[gi]:],
                                    chunk_rows[gi][done_chunks[gi]:]))
             attempts = 0
@@ -624,6 +707,21 @@ class ChunkedScheduler:
             "redispatched_rows": int(redispatched),
         }
         self.history.append(rec)
+        if self._obs is not None:
+            self._m_steps.inc()
+            self._m_rows.inc(int(sum(done_rows)))
+            self._h_step.observe(rec["t_step"])
+            self._obs.tracer.complete(
+                "scheduler.step", t0, rec["t_step"],
+                tid=n_groups, args={"rows": n, "plan_changed": plan_changed,
+                                    "failures": len(failures)})
+            if redispatched:
+                self._m_redispatch.inc(int(redispatched))
+                self._obs.journal.event(
+                    "chunks_redispatched", rows=int(redispatched),
+                    from_groups=sorted(rec["failures"]),
+                    to_groups=[g.name for g, l in
+                               zip(self.groups, self.controller.live) if l])
         if rebalance and not plan_changed and not failures:
             # a plan-change step's times include compiling the new chunk
             # shapes, and a failure step's include recovery re-dispatch —
@@ -636,7 +734,7 @@ class ChunkedScheduler:
         if self.controller.live[gi]:
             if self.controller.n_live == 1:
                 raise RuntimeError(f"all device groups failed: {failures}")
-            self.drop_group(gi)
+            self.drop_group(gi, reason=failures.get(gi, "redispatch failure"))
 
     def run(self, batches, rebalance: bool = True) -> list[dict]:
         """Drive a stream of batches; returns the step records."""

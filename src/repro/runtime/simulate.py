@@ -47,7 +47,7 @@ from ..dist.fault import GroupFailure
 
 __all__ = ["FakeDevice", "FaultEvent", "FaultInjector", "FaultPlan",
            "GroupFailure", "SimReadyAt", "VirtualClock",
-           "make_serial_sim_builder", "sim_skew_groups"]
+           "make_serial_sim_builder", "parse_fault_plan", "sim_skew_groups"]
 
 
 class VirtualClock:
@@ -229,6 +229,52 @@ class FaultPlan:
     @property
     def last_step(self) -> int:
         return max((e.step for e in self.events), default=-1)
+
+
+def parse_fault_plan(spec: str) -> FaultPlan:
+    """Parse a CLI fault-plan spec into a :class:`FaultPlan`.
+
+    Comma-separated events, each ``kind:group@step`` with an extra
+    ``:factor`` for slow::
+
+        kill:0@3,slow:1@9:4,transient:0@5,recover:0@12
+
+    kills group 0 at step 3, slows group 1 to 1/4 speed from step 9,
+    raises one transient on group 0 at step 5, recovers group 0 at step
+    12.  This is the surface behind ``launch/serve.py --fault-plan``
+    (the CI fault drill) — the parsed plan is the same object the tests
+    build by chaining, so a drill spec is exactly reproducible in code.
+    """
+    plan = FaultPlan()
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        try:
+            kind, rest = part.split(":", 1)
+            factor = None
+            if kind == "slow":
+                rest, factor_s = rest.split(":", 1)
+                factor = float(factor_s)
+            group_s, step_s = rest.split("@", 1)
+            group, step = int(group_s), int(step_s)
+        except ValueError as exc:
+            raise ValueError(
+                f"bad fault-plan event {part!r}: expected kind:group@step "
+                "(slow:group@step:factor), e.g. 'kill:0@3,slow:1@9:4'"
+            ) from exc
+        if kind == "kill":
+            plan.kill(group, at=step)
+        elif kind == "slow":
+            plan.slow(group, at=step, factor=factor)
+        elif kind == "transient":
+            plan.transient(group, at=step)
+        elif kind == "recover":
+            plan.recover(group, at=step)
+        else:
+            raise ValueError(f"unknown fault kind {kind!r} in {part!r}; "
+                             f"expected one of {_FAULT_KINDS}")
+    return plan
 
 
 class FaultInjector:

@@ -96,18 +96,22 @@ class StreamingPipeline:
                  chunks_per_group: int = 2, inflight: int = 2,
                  row_quantum: int = 1, clock=None,
                  dispatch_timeout_s: float | None = None,
-                 guard: "ServeGuard | bool | None" = None):
+                 guard: "ServeGuard | bool | None" = None,
+                 observer=None):
         """``guard=True`` wraps the scheduler in a default
         :class:`~repro.runtime.guard.ServeGuard` (kill-switch fallback
         to the best split seen); pass a preconfigured ``ServeGuard``
         (unbound: ``scheduler=None``) to set thresholds or a stored
         fallback split.  ``clock``/``dispatch_timeout_s`` pass through
-        to the scheduler (see ``docs/resilience.md``)."""
+        to the scheduler (see ``docs/resilience.md``); ``observer``
+        (a ``repro.obs.Observer``, default off) flows into the
+        scheduler and the guard, and additionally records a per-batch
+        stream-latency histogram reported by :meth:`summary`."""
         self.scheduler = ChunkedScheduler(
             step_builder, groups, controller=controller,
             chunks_per_group=chunks_per_group, inflight=inflight,
             row_quantum=row_quantum, clock=clock,
-            dispatch_timeout_s=dispatch_timeout_s)
+            dispatch_timeout_s=dispatch_timeout_s, observer=observer)
         if guard is True:
             guard = ServeGuard(self.scheduler)
         elif guard is not None and guard.scheduler is None:
@@ -115,6 +119,9 @@ class StreamingPipeline:
             guard.__post_init__()       # re-validate fallback vs groups
         self.guard = guard or None
         self.records: list[dict] = []
+        self._obs = self.scheduler._obs
+        if self._obs is not None:
+            self._h_batch = self._obs.metrics.histogram("stream.t_step_s")
 
     @property
     def shares(self) -> np.ndarray:
@@ -133,6 +140,8 @@ class StreamingPipeline:
             done = sum(rec["rows_completed"])
             rec = dict(rec, rows_total=int(done),
                        rows_per_s=done / max(rec["t_step"], 1e-9))
+            if self._obs is not None:
+                self._h_batch.observe(rec["t_step"])
             out.append(rec)
         self.records.extend(out)
         return out
@@ -156,4 +165,9 @@ class StreamingPipeline:
         if self.guard is not None:
             out["guard_trips"] = self.guard.switch.n_trips
             out["guard_tripped"] = self.guard.tripped
+        if self._obs is not None and self._h_batch.count:
+            # bucket-estimated tail latencies of the batch stream
+            out["t_step_p50"] = self._h_batch.percentile(0.50)
+            out["t_step_p95"] = self._h_batch.percentile(0.95)
+            out["t_step_p99"] = self._h_batch.percentile(0.99)
         return out

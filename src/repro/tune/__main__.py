@@ -16,6 +16,10 @@ import sys
 
 import numpy as np
 
+from ..obs import get_logger
+
+log = get_logger("repro.tune")
+
 
 def selfcheck(verbose: bool = True) -> list[str]:
     """Smoke-tune every registered strategy; returns the checked names."""
@@ -63,10 +67,17 @@ def selfcheck(verbose: bool = True) -> list[str]:
         assert set(result.best_config) == set(space.names), result
         assert np.isfinite(result.best_energy_measured), result
         assert (result.n_experiments + result.n_predictions) > 0, result
+        assert result.space_size == space.size(), result
+        assert 0 <= result.n_measured <= max(result.n_experiments, 1), result
         if verbose:
-            print(f"[selfcheck] {name:<10s} best={result.best_config} "
-                  f"score={result.best_energy_measured:.4f} "
-                  f"(exp={result.n_experiments} pred={result.n_predictions})")
+            # the paper's effort accounting: measured configs as a
+            # fraction of the enumeration count (~5% in Sec. IV-C)
+            log.info(
+                f"[selfcheck] {name:<10s} best={result.best_config} "
+                f"score={result.best_energy_measured:.4f} "
+                f"(exp={result.n_experiments} pred={result.n_predictions} "
+                f"measured={result.n_measured}/{result.space_size} "
+                f"= {100 * result.experiments_fraction:.1f}%)")
         checked.append(name)
     return checked
 
@@ -77,8 +88,8 @@ def main() -> int:
         print(f"[selfcheck] FAIL: only {len(names)} strategies registered "
               f"({names}); expected >= 6", file=sys.stderr)
         return 1
-    print(f"[selfcheck] OK: {len(names)} strategies "
-          f"({', '.join(names)})")
+    log.info(f"[selfcheck] OK: {len(names)} strategies "
+             f"({', '.join(names)})")
     return 0
 
 

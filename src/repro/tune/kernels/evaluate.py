@@ -58,7 +58,7 @@ class KernelTimer:
 
     def __init__(self, spec: KernelSpec, meta: Mapping[str, Any], dtype: Any,
                  *, interpret: bool | None = None, repeats: int = 3,
-                 seed: int = 0):
+                 seed: int = 0, observer=None):
         self.spec = spec
         self.meta = dict(meta)
         self.dtype = dtype
@@ -76,6 +76,14 @@ class KernelTimer:
         self._cache: dict[tuple, float] = {}
         self.n_measured = 0          # actual kernel executions (deduplicated)
         self.rejected: dict[tuple, str] = {}   # cfg key -> invalidity reason
+        from ...obs import as_observer
+        self._obs = as_observer(observer)
+        if self._obs is not None:
+            m = self._obs.metrics
+            self._m_measured = m.counter(f"kernel.{spec.name}.measured")
+            self._m_rejected = m.counter(f"kernel.{spec.name}.rejected")
+            self._m_cached = m.counter(f"kernel.{spec.name}.cache_hits")
+            self._h_time = m.histogram(f"kernel.{spec.name}.t_best_s")
 
     def _key(self, cfg: Mapping[str, Any]) -> tuple:
         return tuple(sorted((str(k), cfg[k]) for k in cfg))
@@ -101,19 +109,37 @@ class KernelTimer:
     def __call__(self, cfg: Mapping[str, Any]) -> float:
         key = self._key(cfg)
         if key in self._cache:
+            if self._obs is not None:
+                self._m_cached.inc()
             return self._cache[key]
         reason = self.spec.validate(cfg, self.meta)
         if reason is not None:
             self.rejected[key] = reason
             self._cache[key] = float("inf")
+            if self._obs is not None:
+                self._m_rejected.inc()
             return float("inf")
+        if self._obs is not None:
+            with self._obs.tracer.span(f"measure.{self.spec.name}",
+                                       cat="tune", args=dict(cfg)):
+                score = self._guarded_measure(cfg, key)
+        else:
+            score = self._guarded_measure(cfg, key)
+        self._cache[key] = score
+        if self._obs is not None:
+            if np.isfinite(score):
+                self._m_measured.inc()
+                self._h_time.observe(score)
+            else:
+                self._m_rejected.inc()
+        return score
+
+    def _guarded_measure(self, cfg: Mapping[str, Any], key: tuple) -> float:
         try:
-            score = self._measure(dict(cfg))
+            return self._measure(dict(cfg))
         except Exception as exc:            # launch failure = invalid config
             self.rejected[key] = f"launch failed: {type(exc).__name__}"
-            score = float("inf")
-        self._cache[key] = score
-        return score
+            return float("inf")
 
     def _measure(self, cfg: dict) -> float:
         spec, interpret = self.spec, self.interpret

@@ -114,7 +114,8 @@ def tune_kernel(name: str, shape: Mapping[str, Any] | None = None, *,
                 store: Any = None, iterations: int = 300, seed: int = 0,
                 n_train: int | None = None, budget_fraction: float = 0.05,
                 repeats: int = 3, interpret: bool | None = None,
-                smoke: bool = False, **opts) -> KernelTuneOutcome:
+                smoke: bool = False, observer: Any = None,
+                **opts) -> KernelTuneOutcome:
     """Tune one kernel's launch parameters for one (shape, dtype).
 
     ``shape`` overrides entries of the spec's default (or, with
@@ -131,7 +132,7 @@ def tune_kernel(name: str, shape: Mapping[str, Any] | None = None, *,
                 **(shape or {}))
     space = spec.space(meta)
     timer = KernelTimer(spec, meta, dtype, interpret=interpret,
-                        repeats=repeats, seed=seed)
+                        repeats=repeats, seed=seed, observer=observer)
     workload = kernel_workload(name, meta, dtype)
     default_cfg = spec.default_config(space, meta)
     tstore = TuningSession._as_store(store)
@@ -171,7 +172,7 @@ def tune_kernel(name: str, shape: Mapping[str, Any] | None = None, *,
     session = TuningSession(
         space, evaluator=timer, surrogate=surrogate,
         n_training_experiments=n_train_used, warm_start=warm,
-        workload=workload, store=tstore, seed=seed)
+        workload=workload, store=tstore, seed=seed, observer=observer)
     result = session.run(strategy, iterations=iterations, **opts)
     return KernelTuneOutcome(
         kernel=name, shape=dict(meta), dtype=workload["dtype"],

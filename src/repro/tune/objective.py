@@ -263,6 +263,13 @@ class MetricsEvaluator:
     def has_batch(self) -> bool:
         return self._batch is not None
 
+    @property
+    def raw(self):
+        """The underlying scalar oracle (e.g. a ``KernelTimer``), so the
+        session can read accounting it keeps — ``n_measured`` is the
+        deduplicated real-execution count behind the ~5% budget."""
+        return self._scalar
+
     def metrics(self, cfg: Mapping[str, Any]) -> dict[str, float]:
         out = self._scalar(cfg)
         if isinstance(out, Mapping):

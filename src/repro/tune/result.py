@@ -42,6 +42,13 @@ class TuneResult:
     # [[component scores...], config] rows of the non-dominated set, filled
     # by enumerating strategies under a Pareto objective
     pareto_front: list = field(default_factory=list)
+    # deduplicated *real executions* behind the search: ``n_experiments``
+    # counts oracle calls (repeats of a config served from the oracle's
+    # memo included), ``n_measured`` counts distinct configs actually
+    # timed on hardware when the oracle exposes that accounting (e.g.
+    # ``KernelTimer``); equal to ``n_experiments`` otherwise.  This is
+    # the numerator of the paper's ~5%-of-space budget claim.
+    n_measured: int = 0
 
     # ``best_score_*`` are the objective-neutral names for new-API callers;
     # the stored field names keep the paper's "energy" wording (and the

@@ -72,6 +72,7 @@ class TuningSession:
         online: Any = None,
         truth: Callable[[Mapping[str, Any]], Any] | None = None,
         seed: int | None = None,
+        observer: Any = None,
     ):
         self.space = space
         self.evaluator = as_metrics_evaluator(evaluator, evaluator_batch)
@@ -93,6 +94,8 @@ class TuningSession:
             space.validate(warm_start)
             warm_start = dict(warm_start)
         self.warm_start = warm_start
+        from ..obs import as_observer
+        self._obs = as_observer(observer)
 
     @staticmethod
     def _as_store(store):
@@ -245,10 +248,27 @@ class TuningSession:
             raise ValueError("no strategy: pass run('sam') or "
                              "TuningSession(strategy='sam')")
         info = get_strategy(name)
+        if self._obs is not None:
+            self._obs.journal.event("tuning_start", strategy=name,
+                                    objective=self.objective.key,
+                                    space_size=self.space.size())
         if self.store is not None:
             hit = self.store.lookup(self.space, self.workload,
                                     self._store_key(name))
+            if self._obs is not None:
+                self._obs.metrics.counter(
+                    "tune.store_hits" if hit is not None
+                    else "tune.store_misses").inc()
+                self._obs.journal.event(
+                    "store_hit" if hit is not None else "store_miss",
+                    strategy=name, key=self._store_key(name))
             if hit is not None:
+                if self._obs is not None:
+                    self._obs.journal.event(
+                        "tuning_stop", strategy=name, from_cache=True,
+                        n_experiments=hit.n_experiments,
+                        n_measured=hit.n_measured,
+                        space_size=hit.space_size)
                 return hit
         if self.online is not None:
             # fold pending live observations into the surrogate first, so
@@ -256,11 +276,28 @@ class TuningSession:
             self.online.refit()
         if self.seed is not None:
             opts.setdefault("seed", self.seed)
-        outcome = info.fn(self._context(), **opts)
+        if self._obs is not None:
+            with self._obs.tracer.span(f"tune.{name}",
+                                       args={"objective":
+                                             self.objective.key}):
+                outcome = info.fn(self._context(), **opts)
+        else:
+            outcome = info.fn(self._context(), **opts)
         result = self._finalize(name, info, outcome)
         if self.store is not None:
             self.store.record(self.space, self.workload,
                               self._store_key(name), result)
+        if self._obs is not None:
+            # the paper's effort accounting in one event: how many real
+            # measurements bought the winner, out of how large a space
+            self._obs.journal.event(
+                "tuning_stop", strategy=name, from_cache=False,
+                n_experiments=result.n_experiments,
+                n_predictions=result.n_predictions,
+                n_measured=result.n_measured,
+                space_size=result.space_size,
+                experiments_fraction=round(result.experiments_fraction, 6),
+                best_score=round(result.best_energy_measured, 9))
         return result
 
     def _finalize(self, name: str, info, outcome: StrategyOutcome
@@ -273,6 +310,12 @@ class TuningSession:
             for it, (_, c) in outcome.checkpoints.items()
         }
         best_measured, best_metrics = self._truth_metrics(outcome.best_config)
+        # deduplicated real-execution count, when the oracle keeps it
+        # (KernelTimer does); oracle calls otherwise
+        raw = getattr(self.evaluator, "raw", None)
+        n_measured = getattr(raw, "n_measured", None)
+        if n_measured is None:
+            n_measured = outcome.n_experiments
         return TuneResult(
             strategy=name.upper(),
             best_config=dict(outcome.best_config),
@@ -287,4 +330,5 @@ class TuningSession:
             objective=self.objective.key,
             best_metrics=best_metrics,
             pareto_front=outcome.pareto_front,
+            n_measured=int(n_measured),
         )

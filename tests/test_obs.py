@@ -1,0 +1,571 @@
+"""repro.obs: tracer format and determinism, histogram percentiles,
+journal schema and causal order, zero-cost disabled path, and the
+instrumented runtime/guard/tuning call sites (ISSUE 8)."""
+
+import io
+import json
+import os
+import subprocess
+import sys
+import threading
+import tracemalloc
+from bisect import bisect_left
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from helpers import REPO, SRC, make_serial_sim_builder, sim_skew_groups
+
+import repro.obs as obs_pkg
+from repro.obs import (EVENT_KINDS, Histogram, Journal, MetricsRegistry,
+                       Observer, Tracer, as_observer, configure, get_logger,
+                       load_journal, load_trace, validate_events,
+                       validate_trace)
+from repro.obs.__main__ import check_required_order
+from repro.obs.metrics import default_latency_buckets
+from repro.runtime import (ChunkedScheduler, EwmaController, FaultInjector,
+                           FaultPlan, KillSwitch, ServeGuard,
+                           StreamingPipeline, VirtualClock, parse_fault_plan)
+
+BATCH = {"x": np.zeros((128, 4), np.float32)}
+
+
+def sim_rig(observer="on", *, plan=None, skew=3, per_row_s=4e-4):
+    """A 2-group serial-sim scheduler on a VirtualClock with an observer
+    sharing the clock — the rig the benches and the serve drill use.
+    ``observer``: "on" | "off" (disabled Observer) | None (absent)."""
+    clock = VirtualClock()
+    obs = None if observer is None else Observer(
+        enabled=observer == "on", clock=clock)
+    groups = sim_skew_groups(skew)
+    injector = FaultInjector(plan, groups) if plan is not None else None
+    sched = ChunkedScheduler(
+        make_serial_sim_builder(per_row_s, clock=clock, injector=injector),
+        groups, controller=EwmaController(2, min_share=0.02),
+        clock=clock, observer=obs)
+    if injector is not None:
+        injector.attach(sched)
+    return sched, obs, injector, clock
+
+
+# -- histogram percentiles vs numpy ---------------------------------------------
+
+def _bucket_window(h, value):
+    """The [lo, hi] bounds of the bucket owning ``value``."""
+    i = bisect_left(h.bounds, value)
+    lo = h.bounds[i - 1] if i > 0 else h.min
+    hi = h.bounds[i] if i < len(h.bounds) else h.max
+    return lo, hi
+
+
+def test_histogram_percentiles_match_numpy_within_bucket():
+    rng = np.random.default_rng(0)
+    data = rng.lognormal(mean=-6.0, sigma=1.2, size=800)
+    h = Histogram("t")
+    for v in data:
+        h.observe(v)
+    assert h.count == 800
+    assert h.sum == pytest.approx(data.sum())
+    assert h.summary()["mean"] == pytest.approx(data.mean())
+    prev = 0.0
+    for q in (0.50, 0.95, 0.99):
+        exact = float(np.percentile(data, q * 100, method="linear"))
+        est = h.percentile(q)
+        # bucket-censored: the estimate must land in (or clamp to) the
+        # bucket owning the exact quantile, and stay monotone in q
+        lo, hi = _bucket_window(h, exact)
+        assert lo * (1 - 1e-9) <= est <= hi * (1 + 1e-9), (q, exact, est)
+        assert est >= prev
+        prev = est
+
+
+def test_histogram_single_bucket_interpolation():
+    # all samples inside one geometric bucket: the interpolated estimate
+    # lands within that bucket's width of numpy's exact answer
+    rng = np.random.default_rng(1)
+    lo, hi = 1e-3, 10 ** (-3 + 0.25)
+    data = rng.uniform(lo * 1.01, hi * 0.99, size=200)
+    h = Histogram("t")
+    for v in data:
+        h.observe(v)
+    for q in (0.5, 0.95):
+        exact = float(np.percentile(data, q * 100))
+        assert abs(h.percentile(q) - exact) <= hi - lo
+    bounds = default_latency_buckets()
+    assert bounds == tuple(sorted(bounds))
+
+
+def test_histogram_edges_overflow_and_clamping():
+    h = Histogram("t", buckets=(1.0, 10.0))
+    for v in (0.5, 5.0, 500.0):       # one per bucket + overflow
+        h.observe(v)
+    assert h.counts == [1, 1, 1]
+    assert h.min <= h.percentile(0.0) <= 1.0
+    assert h.percentile(1.0) == 500.0     # clamped to observed max
+    with pytest.raises(ValueError):
+        h.percentile(1.5)
+    with pytest.raises(ValueError):
+        Histogram("bad", buckets=(2.0, 1.0))
+    empty = Histogram("e")
+    assert empty.percentile(0.5) is None
+    assert empty.summary() == {"count": 0, "sum": 0.0}
+
+
+# -- metrics registry ------------------------------------------------------------
+
+def test_registry_get_or_create_and_snapshot():
+    m = MetricsRegistry()
+    c = m.counter("a")
+    c.inc()
+    c.inc(2)
+    assert m.counter("a") is c and c.value == 3
+    m.gauge("g").set(0.5)
+    m.histogram("h").observe(1e-3)
+    snap = m.to_dict()
+    assert snap["counters"] == {"a": 3}
+    assert snap["gauges"] == {"g": 0.5}
+    assert snap["histograms"]["h"]["count"] == 1
+
+
+def test_disabled_registry_hands_out_noops():
+    m = MetricsRegistry(enabled=False)
+    c, g, h = m.counter("a"), m.gauge("g"), m.histogram("h")
+    c.inc(10)
+    g.set(1.0)
+    h.observe(2.0)
+    assert h.percentile(0.5) is None
+    assert m.counter("other") is c          # shared singletons
+    assert m.to_dict() == {"counters": {}, "gauges": {}, "histograms": {}}
+
+
+# -- journal ---------------------------------------------------------------------
+
+def test_journal_round_trip_and_schema(tmp_path):
+    clock = VirtualClock()
+    j = Journal(clock=clock)
+    j.event("tuning_start", strategy="sam", space_size=19)
+    clock.advance(0.5)
+    j.event("store_miss", strategy="sam", key="k")
+    clock.advance(0.5)
+    j.event("tuning_stop", strategy="sam", from_cache=False)
+    assert len(j) == 3
+    assert j.by_kind("store_miss")[0]["key"] == "k"
+    assert j.kinds() == {"tuning_start": 1, "store_miss": 1,
+                         "tuning_stop": 1}
+
+    path = j.save(tmp_path / "journal.jsonl")
+    events = load_journal(path)
+    assert events == j.events
+    assert validate_events(events) == []
+    assert [e["seq"] for e in events] == [0, 1, 2]
+    assert events[1]["ts"] == pytest.approx(0.5)
+
+    with pytest.raises(ValueError, match="unknown journal event kind"):
+        j.event("not_a_kind")
+    tampered = [dict(events[0], seq=7), dict(events[1], kind="bogus")]
+    errs = validate_events(tampered)
+    assert any("not dense" in e for e in errs)
+    assert any("unknown kind" in e for e in errs)
+
+
+def test_journal_live_sink_mirrors_events():
+    sink = io.StringIO()
+    j = Journal(sink=sink)
+    j.event("store_hit", key="k")
+    line = json.loads(sink.getvalue())
+    assert line["kind"] == "store_hit" and line["seq"] == 0
+
+
+# -- tracer ----------------------------------------------------------------------
+
+def test_trace_format_and_round_trip(tmp_path):
+    clock = VirtualClock()
+    t = Tracer(clock=clock)
+    t.thread_name(0, "group:fast")
+    t.complete("chunk", 0.0, 0.002, tid=0, args={"rows": 64})
+    clock.advance(0.01)
+    t.instant("demote", tid=0)
+    with t.span("tune.sam", args={"objective": "time"}):
+        clock.advance(0.25)
+    assert len(t) == 4
+    path = t.save(tmp_path / "trace.json")
+    events = load_trace(path)
+    assert validate_trace(events) == []
+    by_name = {e["name"]: e for e in events}
+    assert by_name["chunk"]["ph"] == "X"
+    assert by_name["chunk"]["dur"] == pytest.approx(2000.0)   # microseconds
+    assert by_name["demote"]["ph"] == "i" and by_name["demote"]["s"] == "t"
+    assert by_name["thread_name"]["ph"] == "M"
+    assert by_name["tune.sam"]["dur"] == pytest.approx(0.25e6)
+    # chrome://tracing container shape
+    doc = json.loads(path.read_text())
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+
+    assert validate_trace([{"ph": "Q"}]) != []
+    assert any("missing key" in e
+               for e in validate_trace([{"ph": "X", "name": "x"}]))
+
+
+def test_trace_cross_thread_begin_end():
+    clock = VirtualClock()
+    t = Tracer(clock=clock)
+    token = t.begin("drain", tid=1)
+    clock.advance(0.003)
+
+    th = threading.Thread(target=t.end, args=(token,),
+                          kwargs={"args": {"rows": 32}})
+    th.start()
+    th.join()
+    t.end(9999)                       # unknown token: silent no-op
+    assert len(t) == 1
+    ev = t.events[0]
+    assert ev["dur"] == pytest.approx(3000.0)
+    assert ev["args"] == {"rows": 32}
+
+
+# -- zero-cost disabled path -----------------------------------------------------
+
+def test_disabled_observer_resolves_to_none_and_stays_empty():
+    on = Observer()
+    assert as_observer(on) is on
+    assert as_observer(None) is None
+
+    sched, off, _, _ = sim_rig("off")
+    assert as_observer(off) is None
+    assert sched._obs is None
+    for _ in range(4):
+        sched.step(BATCH)
+    assert len(off.tracer) == 0
+    assert len(off.journal) == 0
+    assert off.metrics.to_dict() == {"counters": {}, "gauges": {},
+                                     "histograms": {}}
+
+
+def test_disabled_observer_allocates_nothing_per_step():
+    """The disabled path must not touch repro.obs at all: tracemalloc
+    filtered to the obs package sees zero allocations across steps."""
+    sched, _, _, _ = sim_rig("off")
+    for _ in range(3):                               # warm every cache
+        sched.step(BATCH)
+    obs_dir = str(Path(obs_pkg.__file__).parent)
+    tracemalloc.start()
+    try:
+        for _ in range(5):
+            sched.step(BATCH)
+        snap = tracemalloc.take_snapshot()
+    finally:
+        tracemalloc.stop()
+    obs_allocs = snap.filter_traces(
+        [tracemalloc.Filter(True, obs_dir + "/*")]).statistics("filename")
+    assert sum(s.size for s in obs_allocs) == 0, obs_allocs
+
+
+# -- instrumented scheduler ------------------------------------------------------
+
+def test_scheduler_metrics_and_rebalance_journal():
+    sched, obs, _, _ = sim_rig("on")
+    for _ in range(6):
+        sched.step(BATCH)
+    m = obs.metrics.to_dict()["counters"]
+    assert m["scheduler.steps"] == 6
+    assert m["scheduler.rows_completed"] == 6 * 128
+    assert m["scheduler.plan_cache_hits"] + \
+        m["scheduler.plan_cache_misses"] == 6
+    # plan-change/failure steps never feed the controller
+    assert m["controller.updates"] == sum(
+        1 for r in sched.history if not r["plan_changed"]
+        and not r["failures"]) > 0
+    adopted = obs.journal.by_kind("rebalance_adopted")
+    assert adopted and {"batch", "old", "new"} <= set(adopted[0])
+    gauges = obs.metrics.to_dict()["gauges"]
+    assert gauges["controller.share.g0"] == pytest.approx(
+        float(sched.shares[0]), abs=1e-6)
+    # lanes are named, step spans exist on the scheduler lane
+    names = {e["name"] for e in obs.tracer.events}
+    assert {"scheduler.step", "chunk", "dispatch"} <= names
+    assert validate_trace(obs.tracer.events) == []
+
+
+def test_scheduler_demote_redispatch_restore_causal_order():
+    plan = FaultPlan().kill(0, at=3).recover(0, at=8)
+    sched, obs, injector, _ = sim_rig("on", plan=plan)
+    for _ in range(10):
+        injector.tick()
+        sched.step(BATCH)
+    demoted = obs.journal.by_kind("group_demoted")
+    redisp = obs.journal.by_kind("chunks_redispatched")
+    restored = obs.journal.by_kind("group_restored")
+    assert demoted and redisp and restored
+    assert demoted[0]["group"] == "fast"
+    assert "killed at step 3" in demoted[0]["reason"]
+    assert redisp[0]["from_groups"] == ["fast"]
+    assert redisp[0]["rows"] > 0
+    # causal: demotion -> re-dispatch -> restore, on one dense sequence
+    assert demoted[0]["seq"] < redisp[0]["seq"] < restored[0]["seq"]
+    assert demoted[0]["ts"] <= redisp[0]["ts"] <= restored[0]["ts"]
+    assert validate_events(obs.journal.events) == []
+
+
+def test_trace_is_deterministic_under_fault_plan():
+    """Same FaultPlan on a VirtualClock => identical trace (modulo drain
+    append order) and identical journal, run to run."""
+    def drill():
+        plan = FaultPlan().kill(0, at=3).slow(1, at=6, factor=2.0)
+        sched, obs, injector, _ = sim_rig("on", plan=plan)
+        for _ in range(8):
+            injector.tick()
+            sched.step(BATCH)
+        key = ("ts", "dur", "name", "tid", "ph")
+        trace = sorted(obs.tracer.events,
+                       key=lambda e: tuple(str(e.get(k)) for k in key))
+        return trace, obs.journal.events, obs.metrics.to_dict()
+
+    t1, j1, m1 = drill()
+    t2, j2, m2 = drill()
+    assert t1 == t2
+    assert j1 == j2
+    assert m1 == m2
+
+
+# -- guard / kill switch ---------------------------------------------------------
+
+def test_guard_journal_armed_tripped_rearmed():
+    class Poisoned(EwmaController):
+        def update(self, times, rows=None):
+            self.updates = getattr(self, "updates", 0) + 1
+            if self.updates >= 8:
+                self.shares = np.asarray([0.15, 0.85])
+                return self.shares
+            return super().update(times, rows=rows)
+
+    clock = VirtualClock()
+    obs = Observer(clock=clock)
+    sched = ChunkedScheduler(
+        make_serial_sim_builder(4e-4, clock=clock), sim_skew_groups(3),
+        controller=Poisoned(2, min_share=0.02), clock=clock, observer=obs)
+    guard = ServeGuard(sched, switch=KillSwitch(threshold=1.5, patience=3,
+                                                cooldown=3),
+                       fallback=np.asarray([0.75, 0.25]))
+    assert guard._obs is obs            # inherited from the scheduler
+    recs = [guard.step(BATCH) for _ in range(25)]
+    verdicts = [r["guard"]["verdict"] for r in recs]
+    assert "trip" in verdicts and "rearm" in verdicts
+
+    armed = obs.journal.by_kind("killswitch_armed")
+    tripped = obs.journal.by_kind("killswitch_tripped")
+    rearmed = obs.journal.by_kind("killswitch_rearmed")
+    assert len(armed) == 1 and armed[0]["patience"] == 3
+    assert tripped and tripped[0]["t_step"] > tripped[0]["baseline"]
+    assert rearmed
+    assert armed[0]["seq"] < tripped[0]["seq"] < rearmed[0]["seq"]
+    counters = obs.metrics.to_dict()["counters"]
+    assert counters["guard.verdict.trip"] == verdicts.count("trip")
+    assert counters["guard.verdict.ok"] == verdicts.count("ok")
+
+
+# -- tuning session accounting ---------------------------------------------------
+
+def test_session_accounting_and_store_events(tmp_path):
+    from repro.core import ConfigSpace, Param
+    from repro.runtime import TuningStore
+    from repro.tune import TuningSession
+
+    space = ConfigSpace([Param("x", tuple(range(12)))])
+    store = TuningStore(tmp_path / "t.json", devices="pinned")
+    obs = Observer()
+    session = TuningSession(space, evaluator=lambda c: (c["x"] - 7) ** 2,
+                            store=store, observer=obs)
+    res = session.run("sam", iterations=8, seed=0)
+    assert res.space_size == space.size() == 12
+    assert 0 < res.n_measured <= res.n_experiments
+    assert res.experiments_fraction == \
+        pytest.approx(res.n_experiments / 12)
+    assert obs.journal.by_kind("store_miss")
+    stops = obs.journal.by_kind("tuning_stop")
+    assert stops[-1]["from_cache"] is False
+    assert stops[-1]["n_measured"] == res.n_measured
+    assert stops[-1]["space_size"] == 12
+
+    res2 = session.run("sam", iterations=8, seed=0)     # served from store
+    assert res2.best_config == res.best_config
+    assert obs.journal.by_kind("store_hit")
+    assert obs.journal.by_kind("tuning_stop")[-1]["from_cache"] is True
+    c = obs.metrics.to_dict()["counters"]
+    assert c["tune.store_hits"] == 1 and c["tune.store_misses"] == 1
+    starts = obs.journal.by_kind("tuning_start")
+    assert len(starts) == 2 and starts[0]["seq"] < stops[0]["seq"]
+    # the strategy run is a trace span
+    assert any(e["name"] == "tune.sam" for e in obs.tracer.events)
+
+
+def test_kernel_timer_counts_deduplicated_executions():
+    from repro.tune import kernels as ktune
+    from repro.tune.kernels.evaluate import KernelTimer
+
+    spec = ktune.get_kernel("flash_attention")
+    meta = spec.smoke_shape
+    space = spec.space(meta)
+    obs = Observer()
+    timer = KernelTimer(spec, meta, "float32", repeats=1, seed=0,
+                        observer=obs)
+    cfg = spec.default_config(space, meta)
+    t1 = timer(cfg)
+    t2 = timer(cfg)                     # memoized: no second execution
+    assert np.isfinite(t1) and t1 == t2
+    assert timer.n_measured == 1
+    c = obs.metrics.to_dict()["counters"]
+    assert c[f"kernel.{spec.name}.measured"] == 1
+    assert c[f"kernel.{spec.name}.cache_hits"] == 1
+
+
+# -- streaming pipeline ----------------------------------------------------------
+
+def test_stream_summary_reports_latency_percentiles():
+    clock = VirtualClock()
+    obs = Observer(clock=clock)
+    pipe = StreamingPipeline(
+        make_serial_sim_builder(4e-4, clock=clock), sim_skew_groups(3),
+        controller=EwmaController(2, min_share=0.02), clock=clock,
+        observer=obs)
+    pipe.run([BATCH] * 6)
+    s = pipe.summary()
+    assert s["batches"] == 6
+    assert 0 < s["t_step_p50"] <= s["t_step_p95"] <= s["t_step_p99"]
+
+
+# -- structured logger -----------------------------------------------------------
+
+def test_logger_levels_journal_mirror_and_configure():
+    out = io.StringIO()
+    j = Journal()
+    log = get_logger("repro.test_obs")
+    try:
+        configure(level="info", journal=j, stream=out)
+        log.debug("hidden")
+        log.info("shown line", batches=4)
+        log.warning("warned")
+        assert out.getvalue() == "shown line\nwarned\n"   # verbatim, filtered
+        assert [e["msg"] for e in j.events] == ["shown line", "warned"]
+        assert j.events[0]["kind"] == "log"
+        assert j.events[0]["batches"] == 4
+        assert j.events[0]["logger"] == "repro.test_obs"
+
+        configure(level="error")                  # retroactive on the handle
+        log.warning("now hidden")
+        assert out.getvalue() == "shown line\nwarned\n"
+
+        configure(level="debug", journal=False)   # detach the mirror
+        log.debug("visible again")
+        assert out.getvalue().endswith("visible again\n")
+        assert len(j.events) == 2
+        with pytest.raises(ValueError, match="unknown log level"):
+            configure(level="loud")
+    finally:
+        configure(level="info", journal=False, stream=False)
+    assert get_logger("repro.test_obs") is log    # registry is process-wide
+
+
+# -- fault-plan CLI surface ------------------------------------------------------
+
+def test_parse_fault_plan_round_trips_the_chained_builder():
+    parsed = parse_fault_plan("kill:0@3, slow:1@9:4, transient:0@5,"
+                              "recover:0@12")
+    chained = (FaultPlan().kill(0, at=3).slow(1, at=9, factor=4.0)
+               .transient(0, at=5).recover(0, at=12))
+    assert parsed.events == chained.events
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        parse_fault_plan("explode:0@3")
+    for bad in ("kill:0", "slow:1@9", "kill:a@b"):
+        with pytest.raises(ValueError, match="bad fault-plan event"):
+            parse_fault_plan(bad)
+
+
+# -- validator CLI helpers -------------------------------------------------------
+
+def test_check_required_order():
+    events = [{"seq": 0, "ts": 0.0, "kind": "group_demoted"},
+              {"seq": 1, "ts": 1.0, "kind": "chunks_redispatched"},
+              {"seq": 2, "ts": 2.0, "kind": "killswitch_tripped"}]
+    assert check_required_order(
+        events, ["group_demoted", "chunks_redispatched",
+                 "killswitch_tripped"]) == []
+    assert any("never occurred" in e for e in check_required_order(
+        events, ["group_restored"]))
+    assert check_required_order(
+        events, ["killswitch_tripped", "group_demoted"]) != []
+
+
+def test_schema_file_matches_event_catalog():
+    schema = json.loads((REPO / "docs" / "obs_schema.json").read_text())
+    assert set(schema["journal"]["kinds"]) == set(EVENT_KINDS)
+
+
+# -- report ----------------------------------------------------------------------
+
+def test_summary_report_and_render(tmp_path):
+    obs = Observer()
+    obs.metrics.counter("scheduler.steps").inc(4)
+    obs.metrics.histogram("scheduler.t_step_s").observe(2e-3)
+    obs.journal.event("store_hit", key="k")
+    obs.tracer.instant("demote")
+    path = tmp_path / "obs_summary.json"
+    summary = obs.write_summary(path, extra={"stream": {"batches": 4}},
+                                date="2026-08-07")
+    on_disk = json.loads(path.read_text())
+    assert on_disk["metrics"]["counters"]["scheduler.steps"] == 4
+    assert on_disk["journal"]["by_kind"] == {"store_hit": 1}
+    assert on_disk["trace"]["n_events"] == 1
+    assert on_disk["meta"]["date"] == "2026-08-07"
+    assert on_disk["stream"] == {"batches": 4}
+    text = obs.render()
+    assert "scheduler.steps" in text and "store_hit" in text
+    assert summary["journal"]["n_events"] == 1
+
+
+# -- end-to-end: the serve fault drill (the CI obs-smoke job) --------------------
+
+def test_serve_fault_drill_produces_causal_artifacts(tmp_path):
+    trace = tmp_path / "trace.json"
+    journal = tmp_path / "journal.jsonl"
+    metrics = tmp_path / "obs_summary.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{SRC}:{env.get('PYTHONPATH', '')}"
+    env["JAX_PLATFORMS"] = "cpu"
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--smoke", "--stream",
+           "--batch", "16", "--stream-batches", "16", "--slow", "4",
+           "--guard", "--guard-patience", "2",
+           "--fault-plan", "kill:0@3,slow:1@9:4",
+           "--trace-out", str(trace), "--journal-out", str(journal),
+           "--metrics-out", str(metrics)]
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+
+    events = load_trace(trace)
+    assert validate_trace(events) == []
+    assert len(events) > 20
+
+    jev = load_journal(journal)
+    assert validate_events(jev) == []
+    order = ["group_demoted", "chunks_redispatched", "killswitch_tripped"]
+    assert check_required_order(jev, order) == []
+    demoted = [e for e in jev if e["kind"] == "group_demoted"][0]
+    assert demoted["group"] == "fast" and "killed at step 3" in \
+        demoted["reason"]
+
+    summary = json.loads(metrics.read_text())
+    assert summary["metrics"]["counters"]["scheduler.steps"] == 16
+    # the "wrote <artifact>" log lines land in the journal after it is
+    # saved, so the summary may count a few more events than the file
+    assert summary["journal"]["n_events"] >= len(jev)
+
+    # the CI validator passes on its own artifacts
+    check = subprocess.run(
+        [sys.executable, "-m", "repro.obs", "--trace", str(trace),
+         "--journal", str(journal),
+         "--schema", str(REPO / "docs" / "obs_schema.json"),
+         "--require", ",".join(order)],
+        env=env, capture_output=True, text=True, timeout=120)
+    assert check.returncode == 0, check.stdout + check.stderr
+    assert "[obs] OK" in check.stdout
