@@ -1,0 +1,279 @@
+"""Benchmark: request-level serving under offered load (repro.serve).
+
+Sections, written to BENCH_serve.json:
+
+  1. ``offered_load`` — the serving engine's latency/goodput profile
+     across an offered-load sweep (under / at / over the sim rig's
+     capacity): per-regime p50/p95/p99 end-to-end latency, the
+     queue-delay vs service-time decomposition, shed rate and goodput.
+     Asserts the two serving acceptance bars: under capacity the
+     admitted p99 end-to-end latency stays within 2x the no-queue
+     service time (batching cost bounded), and over capacity the
+     admission layer sheds (shed rate > 0) while the *admitted* p99
+     stays bounded — goodput over throughput, never an unbounded queue.
+  2. ``tuned_batcher`` — the batcher's three knobs tuned through a
+     ``TuningSession`` (``sam``, ~10 of 210 configs ≈ 4.8% — the
+     paper's ~5% envelope), compared against the default config on the
+     same workload; asserts the tuned objective is no worse than
+     default and that a repeat tuning call re-serves from the
+     ``TuningStore`` with zero new measurements.
+  3. ``degraded_drill`` — a mid-run group kill under a ``FaultPlan``
+     (with transients forcing the per-request retry path): asserts
+     **zero lost requests** (every admitted request terminally
+     completes or is shed with a journaled reason) and that two
+     identical drills produce bit-identical decision journals.
+
+Everything runs the deterministic sim rig (``VirtualClock``; wall-time
+independent), so the recorded latencies are simulated instants and the
+bars hold on any machine.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.obs import Observer  # noqa: E402
+from repro.runtime import TuningStore  # noqa: E402
+from repro.runtime.simulate import FaultPlan  # noqa: E402
+from repro.serve import (BatcherConfig, make_sim_engine,  # noqa: E402
+                         tune_batcher)
+
+ROOT = Path(__file__).resolve().parents[1]
+
+# sim rig constants (see make_sim_engine): 4 fast + 4 slow (skew 3)
+# devices at PER_ROW_S per fast row -> capacity (4 + 4/3)/PER_ROW_S
+# rows/s; the source's default row mix averages ~2.1 rows/request
+PER_ROW_S = 4e-4
+CAPACITY_ROWS_PER_S = (4 + 4 / 3) / PER_ROW_S
+MEAN_ROWS_PER_REQ = 2.1
+
+
+def bench_offered_load(n_requests: int = 400) -> dict:
+    """Latency/goodput across under-/at-/over-capacity offered loads.
+
+    The sweep runs the latency-first batcher (eager dispatch,
+    ``coalesce_window_s=0`` — the coalesce trade is what
+    ``bench_tuned_batcher`` explores), so queue delay in the records is
+    genuine contention, not a configured hold.
+    """
+    cap_rps = CAPACITY_ROWS_PER_S / MEAN_ROWS_PER_REQ
+    eager = BatcherConfig(coalesce_window_s=0.0)
+    regimes = {"under": 0.3, "at": 0.9, "over": 3.0}
+    out: dict = {"capacity_rows_per_s": round(CAPACITY_ROWS_PER_S, 1),
+                 "capacity_rps": round(cap_rps, 1), "regimes": {}}
+    for name, load in regimes.items():
+        # overload needs enough arrivals to actually fill the
+        # backpressure bound (queue_depth_rows) before the source dries
+        n_reg = max(n_requests, 300) if name == "over" else n_requests
+        eng = make_sim_engine(n_requests=n_reg,
+                              rate_rps=load * cap_rps, seed=11,
+                              per_row_s=PER_ROW_S, batcher_config=eager)
+        s = eng.run()
+        out["regimes"][name] = {
+            "offered_fraction": load,
+            "rate_rps": round(load * cap_rps, 1),
+            "completed": s["completed"], "shed": s["shed"],
+            "shed_rate": round(s["shed_rate"], 4),
+            "shed_reasons": s["shed_reasons"],
+            "goodput_rows_per_s": round(s.get("goodput_rows_per_s", 0.0), 1),
+            **{k: round(s[k], 6) for k in s
+               if k.startswith(("e2e_", "queue_delay_", "service_"))},
+        }
+    under, over = out["regimes"]["under"], out["regimes"]["over"]
+    # the no-queue service floor: p99 of the service component
+    # (dispatch -> completion, every waiting term excluded) under light
+    # load — what a request pays with an empty queue in front of it
+    floor = under["service_p99"]
+    out["service_floor_s"] = floor
+    out["underloaded_p99_vs_service_floor"] = round(
+        under["e2e_p99"] / max(floor, 1e-12), 3)
+    # bar 1: under capacity, queueing at most doubles the no-queue
+    # service time at the p99, and nothing is shed
+    assert under["e2e_p99"] <= 2.0 * floor, out
+    assert under["shed_rate"] == 0.0, out
+    # bar 2: over capacity the valve sheds rather than queueing without
+    # bound — the *admitted* p99 stays under the backpressure bound
+    # (queue_depth_rows of backlog at capacity drain rate, x2 slack,
+    # plus the service floor), independent of how far over the load is
+    queue_bound = (eager.queue_depth_rows / CAPACITY_ROWS_PER_S) * 2 + floor
+    out["overload_queue_bound_s"] = round(queue_bound, 6)
+    assert over["shed_rate"] > 0.0, out
+    assert over["e2e_p99"] <= queue_bound, out
+    return out
+
+
+def bench_tuned_batcher(n_requests: int = 250,
+                        iterations: int = 15) -> dict:
+    """Tune (max_batch_rows, coalesce_window, queue_depth) through the
+    paper's tuning machinery at <= 5% of the space; the sim rig is cheap
+    enough to also enumerate the exhaustive oracle, so the section
+    reports the paper's central ratio directly (tuned objective vs the
+    true optimum at a ~20x measurement discount).  A repeat workload
+    re-serves the stored winner with zero new measurements.
+    """
+    from repro.serve import batcher_space
+
+    cap_rps = CAPACITY_ROWS_PER_S / MEAN_ROWS_PER_REQ
+    rate = 1.2 * cap_rps                     # mild overload: knobs matter
+    workload = {"n_requests": n_requests, "rate_rps": round(rate, 1),
+                "seed": 21}
+
+    def objective(cfg: BatcherConfig) -> dict:
+        eng = make_sim_engine(n_requests=n_requests, rate_rps=rate,
+                              seed=21, per_row_s=PER_ROW_S,
+                              batcher_config=cfg)
+        s = eng.run()
+        # admitted tail latency, shed-penalized: a config must not win
+        # by shedding its way to an empty queue
+        obj = s.get("e2e_p95", 10.0) + 0.1 * s["shed_rate"]
+        return {"time": obj, "shed_rate": s["shed_rate"],
+                "e2e_p95": s.get("e2e_p95")}
+
+    store_path = ROOT / "BENCH_serve_store.json"
+    if store_path.exists():
+        store_path.unlink()
+    store = TuningStore(store_path)
+    # the annealing schedule length is sized so distinct measurements
+    # stay inside the 5% envelope (sam dedups revisited configs)
+    cfg, res = tune_batcher(objective, store=store, workload=workload,
+                            iterations=iterations)
+    cfg2, res2 = tune_batcher(objective, store=store, workload=workload,
+                              iterations=iterations)
+    # the exhaustive baseline the paper's method is measured against
+    space = batcher_space()
+    oracle_obj, oracle_cfg = min(
+        ((objective(BatcherConfig.from_config(c))["time"], c)
+         for c in space.enumerate()), key=lambda x: x[0])
+    default = objective(BatcherConfig())["time"]
+    tuned = objective(cfg)["time"]
+    out = {
+        "space_size": space.size(),
+        "n_experiments": res.n_experiments,
+        "experiments_fraction": round(res.experiments_fraction, 4),
+        "best_config": {"max_batch_rows": cfg.max_batch_rows,
+                        "coalesce_window_s": cfg.coalesce_window_s,
+                        "queue_depth_rows": cfg.queue_depth_rows},
+        "oracle_config": dict(oracle_cfg),
+        "objective_tuned": round(tuned, 6),
+        "objective_oracle": round(oracle_obj, 6),
+        "objective_default": round(default, 6),
+        "tuned_vs_oracle": round(tuned / oracle_obj, 4),
+        "repeat_from_cache": bool(res2.from_cache),
+        "repeat_new_measurements": 0 if res2.from_cache
+        else res2.n_experiments,
+    }
+    assert res.experiments_fraction <= 0.05, out      # the ~5% envelope
+    # near-optimality bar: the ~5% search lands within 2x of the
+    # exhaustive optimum of a space whose worst configs are ~10x it
+    assert tuned <= 2.0 * oracle_obj, out
+    assert res2.from_cache and cfg2 == cfg, out       # zero re-measurement
+    return out
+
+
+def bench_degraded_drill(n_requests: int = 250) -> dict:
+    """Mid-run kill + transient retry path: zero lost requests and
+    run-to-run identical journals."""
+    plan = (FaultPlan().transient(0, at=3).transient(1, at=3)
+            .kill(0, at=6).recover(0, at=12))
+    cap_rps = CAPACITY_ROWS_PER_S / MEAN_ROWS_PER_REQ
+    # small eager batches: enough scheduler steps that the scripted
+    # fault sequence lands mid-run at both smoke and full sizes
+    drill_cfg = BatcherConfig(max_batch_rows=16, coalesce_window_s=0.0)
+
+    def drill():
+        obs = Observer()
+        eng = make_sim_engine(n_requests=n_requests, rate_rps=0.5 * cap_rps,
+                              seed=31, per_row_s=PER_ROW_S, fault_plan=plan,
+                              guard=True, observer=obs,
+                              batcher_config=drill_cfg)
+        s = eng.run()
+        return s, [json.dumps(e) for e in obs.journal.events]
+
+    s1, j1 = drill()
+    s2, j2 = drill()
+    kinds: dict[str, int] = {}
+    for line in j1:
+        k = json.loads(line)["kind"]
+        kinds[k] = kinds.get(k, 0) + 1
+    out = {
+        "requests": s1["requests"], "completed": s1["completed"],
+        "shed": s1["shed"], "shed_reasons": s1["shed_reasons"],
+        "retries": s1["retries"],
+        "accounted": s1["completed"] + s1["shed"],
+        "journal_events": len(j1),
+        "journal_kinds": kinds,
+        "journals_identical": j1 == j2,
+    }
+    # zero lost requests: every request is terminal (completed or shed
+    # with a reason)
+    assert out["accounted"] == n_requests, out
+    assert all(r is not None
+               for r in s1["shed_reasons"]), out
+    # the decision chain is journal-visible and deterministic
+    assert kinds.get("group_demoted", 0) >= 1, out
+    assert kinds.get("request_retried", 0) >= 1, out
+    assert out["journals_identical"], "journals differ between runs"
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer requests per section)")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_serve.json"))
+    ap.add_argument("--date", default=None,
+                    help="wall date stamped into the meta block (CI passes "
+                         "it; defaults to the BENCH_DATE env var, else null)")
+    args = ap.parse_args()
+
+    n = 150 if args.smoke else 400
+    t0 = time.perf_counter()
+    results = {
+        "offered_load": bench_offered_load(n_requests=n),
+        "tuned_batcher": bench_tuned_batcher(
+            n_requests=100 if args.smoke else 250,
+            iterations=12 if args.smoke else 15),
+        "degraded_drill": bench_degraded_drill(
+            n_requests=100 if args.smoke else 250),
+    }
+    results["smoke"] = bool(args.smoke)
+    results["wall_s"] = round(time.perf_counter() - t0, 3)
+    from repro.obs.provenance import build_meta
+    results["meta"] = build_meta(args.date)
+
+    out = Path(args.out)
+    out.write_text(json.dumps(results, indent=1) + "\n")
+    ol = results["offered_load"]
+    print(f"offered_load: under p99 "
+          f"{ol['regimes']['under']['e2e_p99'] * 1e3:.2f}ms "
+          f"({ol['underloaded_p99_vs_service_floor']}x service floor), "
+          f"over shed_rate {ol['regimes']['over']['shed_rate']}")
+    tb = results["tuned_batcher"]
+    print(f"tuned_batcher: {tb['n_experiments']} of {tb['space_size']} "
+          f"configs ({100 * tb['experiments_fraction']:.1f}%), "
+          f"tuned/oracle {tb['tuned_vs_oracle']}x, "
+          f"repeat cached={tb['repeat_from_cache']}")
+    dd = results["degraded_drill"]
+    print(f"degraded_drill: {dd['accounted']}/{dd['requests']} accounted "
+          f"({dd['completed']} completed, {dd['shed']} shed, "
+          f"{dd['retries']} retries), journals identical: "
+          f"{dd['journals_identical']}")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,17 @@ trace, the decision journal (JSONL), and an ``obs_summary.json``.
 against the simulated serial-device groups on a ``VirtualClock`` (no
 model build, deterministic timestamps) — the CI obs-smoke job validates
 its artifacts against ``docs/obs_schema.json``.
+
+``--serve-requests N`` switches to the request-level serving engine
+(``repro.serve``): N requests from a deterministic arrival source flow
+through SLO-aware admission and the continuous batcher into the
+chunked scheduler, with per-request completion records.  With
+``--sim-serve`` or ``--fault-plan`` the engine runs the deterministic
+sim rig (``VirtualClock``, no model build — the CI serve-smoke drill);
+otherwise real prefill+decode serves each formed batch.
+``--tune-batcher`` tunes the batcher knobs through ``TuningSession``
+(persisted in ``--batcher-store``) before serving; ``docs/serving.md``
+documents the policies.
 """
 
 from __future__ import annotations
@@ -276,6 +287,60 @@ def serve_stream(cfg, *, groups: list[DeviceGroup], n_batches: int = 4,
     return {"records": records, "summary": summary}
 
 
+def serve_requests(cfg, *, groups: list[DeviceGroup], n_requests: int,
+                   rate_rps: float, prompt_len: int, gen: int,
+                   seed: int = 0, batcher_config=None, guard: bool = False,
+                   observer=None, row_quantum: int = 1,
+                   model=None, step_builder=None) -> dict:
+    """Request-level serving on real devices: the ``repro.serve`` engine
+    over a prefill+decode step builder.
+
+    Every request asks for rows of one ``(prompt_len, gen)`` shape (the
+    arrival process, priorities and SLOs come from the source's default
+    mix); the continuous batcher re-forms a scheduler batch per step
+    from whatever is queued, and the chunked scheduler splits each batch
+    across ``groups``.  Arrival waits are real ``time.sleep`` — for the
+    deterministic virtual-clock rig use ``repro.serve.make_sim_engine``
+    (the ``--sim-serve`` / ``--fault-plan`` path).
+    """
+    from ..runtime import ChunkedScheduler, ServeGuard
+    from ..serve import (AdmissionController, BatcherConfig,
+                         ContinuousBatcher, RequestSource, ServeEngine,
+                         SloPolicy)
+
+    if step_builder is None:
+        model = model if model is not None else build_model(cfg)
+        step_builder = _memoize_per_group(_stream_step_builder(
+            model, prompt_len=prompt_len, gen=gen, seed=seed))
+    # anchor arrivals on the engine's wall clock (the sim rig's
+    # VirtualClock starts at 0; perf_counter does not)
+    source = RequestSource(n_requests=n_requests, rate_rps=rate_rps,
+                           seed=seed, shapes=((prompt_len, gen),),
+                           rows_choices=(1, 2, 4),
+                           start=time.perf_counter())
+    rng = np.random.default_rng(seed)
+
+    def payload_fn(shape, rows):
+        return {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (rows, shape[0])), jnp.int32)}
+
+    scheduler = ChunkedScheduler(step_builder, groups,
+                                 row_quantum=max(row_quantum, 1),
+                                 observer=observer)
+    target = ServeGuard(scheduler) if guard else scheduler
+    bcfg = batcher_config or BatcherConfig()
+    engine = ServeEngine(
+        target, source=source,
+        admission=AdmissionController(
+            SloPolicy(max_queue_rows=bcfg.queue_depth_rows)),
+        batcher=ContinuousBatcher(bcfg),
+        payload_fn=payload_fn, observer=observer)
+    summary = engine.run()
+    summary["tokens_per_s"] = summary.get("goodput_rows_per_s", 0.0) * gen
+    return {"summary": summary,
+            "records": [r.record() for r in engine.done]}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b", choices=configs.ARCH_NAMES)
@@ -337,6 +402,24 @@ def main() -> None:
     ap.add_argument("--sim-devices", type=int, default=8,
                     help="device count of the simulated groups under "
                     "--fault-plan")
+    ap.add_argument("--serve-requests", type=int, default=None, metavar="N",
+                    help="request-level serving (repro.serve): N requests "
+                    "from a deterministic arrival source through admission "
+                    "-> continuous batching -> the chunked scheduler")
+    ap.add_argument("--request-rate", type=float, default=200.0,
+                    help="offered load for --serve-requests (requests/s)")
+    ap.add_argument("--serve-seed", type=int, default=0,
+                    help="seed of the request arrival source")
+    ap.add_argument("--sim-serve", action="store_true",
+                    help="run --serve-requests on the deterministic sim "
+                    "rig (VirtualClock, no model build) even without a "
+                    "--fault-plan")
+    ap.add_argument("--tune-batcher", action="store_true",
+                    help="tune the continuous-batcher knobs through a "
+                    "TuningSession (sim-rig evaluations) before serving")
+    ap.add_argument("--batcher-store", default=None, metavar="PATH",
+                    help="TuningStore JSON caching tuned batcher configs "
+                    "per workload signature")
     args = ap.parse_args()
     from ..obs import Observer, configure
     if args.log_level:
@@ -353,6 +436,82 @@ def main() -> None:
         # the tuned launch parameters with zero extra measurements
         from ..tune import kernels as ktune
         ktune.configure(args.tuned_kernels)
+    if args.serve_requests:
+        from ..serve import BatcherConfig, make_sim_engine, tune_batcher
+        observer = None
+        if args.trace_out or args.journal_out or args.metrics_out:
+            observer = Observer()
+            configure(journal=observer.journal)
+        sim = bool(args.fault_plan or args.sim_serve)
+        bcfg = None
+        if args.tune_batcher:
+            # tune on the sim rig (cheap, deterministic); the store
+            # re-serves a known workload with zero new measurements
+            from ..runtime import TuningStore
+            store = TuningStore(args.batcher_store) \
+                if args.batcher_store else None
+            workload = {"n_requests": args.serve_requests,
+                        "rate_rps": args.request_rate,
+                        "seed": args.serve_seed}
+
+            def evaluate(cand):
+                eng = make_sim_engine(n_requests=args.serve_requests,
+                                      rate_rps=args.request_rate,
+                                      seed=args.serve_seed,
+                                      batcher_config=cand)
+                s = eng.run()
+                return {"time": s.get("e2e_p95", 10.0)
+                        + 0.1 * s["shed_rate"],
+                        "shed_rate": s["shed_rate"]}
+
+            bcfg, tuned = tune_batcher(evaluate, store=store,
+                                       workload=workload,
+                                       observer=observer)
+            log.info(f"tuned batcher: {bcfg} "
+                     f"({tuned.n_experiments} measurements, "
+                     f"{100 * tuned.experiments_fraction:.1f}% of space"
+                     f"{', cached' if tuned.from_cache else ''})")
+        if sim:
+            from ..runtime.simulate import parse_fault_plan
+            plan = parse_fault_plan(args.fault_plan) \
+                if args.fault_plan else None
+            engine = make_sim_engine(n_requests=args.serve_requests,
+                                     rate_rps=args.request_rate,
+                                     seed=args.serve_seed, fault_plan=plan,
+                                     guard=args.guard or bool(plan),
+                                     batcher_config=bcfg,
+                                     observer=observer)
+            s = engine.run()
+        else:
+            devs = jax.devices()[:max(args.batch, 1)]
+            if 0 < args.slow < len(devs):
+                groups = [DeviceGroup("fast", devs[:-args.slow]),
+                          DeviceGroup("slow", devs[-args.slow:])]
+            else:
+                groups = [DeviceGroup("all", devs)]
+            out = serve_requests(
+                cfg, groups=groups, n_requests=args.serve_requests,
+                rate_rps=args.request_rate, prompt_len=args.prompt_len,
+                gen=args.gen, seed=args.serve_seed, batcher_config=bcfg,
+                guard=args.guard, observer=observer)
+            s = out["summary"]
+        log.info(f"serve: {s['completed']}/{s['requests']} completed  "
+                 f"{s['shed']} shed {s['shed_reasons']}  "
+                 f"{s['retries']} retries  "
+                 f"e2e p99 {s.get('e2e_p99', float('nan')):.4f}s")
+        if observer is not None:
+            if args.trace_out:
+                path = observer.save_trace(args.trace_out)
+                log.info(f"trace: {path} ({len(observer.tracer)} events)")
+            if args.journal_out:
+                path = observer.save_journal(args.journal_out)
+                log.info(f"journal: {path} "
+                         f"({len(observer.journal)} events)")
+            if args.metrics_out:
+                observer.write_summary(args.metrics_out,
+                                       extra={"serve": s})
+                log.info(f"metrics: {args.metrics_out}")
+        return
     if args.stream:
         clock = injector = observer = None
         if args.fault_plan:

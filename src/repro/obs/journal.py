@@ -25,6 +25,11 @@ fields of each):
   * ``store_hit`` / ``store_miss`` — the persistent tuning cache;
   * ``surrogate_refit`` — the online feedback loop folded live
     observations into the BDTR pair;
+  * ``request_admitted`` / ``request_shed`` / ``request_retired`` /
+    ``request_retried`` — the request-level serving layer
+    (``repro.serve``): one event per admission decision, per shed
+    (with the policy reason), per completed retirement (with the
+    queue-delay/service decomposition) and per post-failure retry;
   * ``log`` — a structured-logger line routed into the journal sink.
 """
 
@@ -44,6 +49,8 @@ EVENT_KINDS = frozenset({
     "guard_membership_change",
     "tuning_start", "tuning_stop", "store_hit", "store_miss",
     "surrogate_refit",
+    "request_admitted", "request_shed", "request_retired",
+    "request_retried",
     "log",
 })
 

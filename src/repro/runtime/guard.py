@@ -207,6 +207,31 @@ class ServeGuard:
     def tripped(self) -> bool:
         return self.switch.tripped
 
+    @property
+    def degraded(self) -> bool:
+        """True while the serving path is in degraded mode: the kill
+        switch is tripped (controller untrusted, pinned fallback) or
+        group membership has shrunk (reduced capacity).  The
+        request-level admission layer (``repro.serve.admission``)
+        consults this to make per-request retry/shed decisions."""
+        return self.switch.tripped \
+            or not bool(self.scheduler.controller.live.all())
+
+    def state(self) -> dict:
+        """Snapshot of the guard's observable state for layers above
+        (admission control, CLI status lines): kill-switch state,
+        baseline, live membership and the combined degraded flag."""
+        ctrl = self.scheduler.controller
+        return {
+            "tripped": self.switch.tripped,
+            "baseline": self.switch.baseline,
+            "streak": self.switch.streak,
+            "n_trips": self.switch.n_trips,
+            "live": [bool(x) for x in ctrl.live],
+            "n_live": ctrl.n_live,
+            "degraded": self.degraded,
+        }
+
     def _fallback_shares(self) -> np.ndarray:
         ctrl = self.scheduler.controller
         shares = self.fallback if self.fallback is not None \

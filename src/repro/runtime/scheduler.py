@@ -47,6 +47,23 @@ from ..obs import as_observer
 __all__ = ["ChunkedScheduler", "EwmaController", "ewma_rebalance"]
 
 
+def _slice_spans(spans: Sequence[tuple[int, int]], lo: int,
+                 count: int) -> list[tuple[int, int]]:
+    """Sub-spans covering rows ``[lo, lo + count)`` of the concatenation
+    of ``spans`` (each a ``(batch_row_start, n_rows)`` pair).  Used to
+    keep per-row completion attribution exact through the re-dispatch
+    path, where orphaned chunks are merged and re-split."""
+    out = []
+    pos = 0
+    for start, n in spans:
+        take_lo = max(lo, pos)
+        take_hi = min(lo + count, pos + n)
+        if take_hi > take_lo:
+            out.append((start + take_lo - pos, take_hi - take_lo))
+        pos += n
+    return out
+
+
 def _project_simplex_floor(w: np.ndarray, floor: float) -> np.ndarray:
     """Nearest share vector with ``sum == 1`` and every entry ``>= floor``
     (scales the above-floor mass uniformly)."""
@@ -516,20 +533,27 @@ class ChunkedScheduler:
         plan = self._plans[(n, self._live_key())]
 
         # contiguous per-group row ranges, then per-group chunk slices
-        # (sizes come from the plan cache — no recompute per step)
+        # (sizes come from the plan cache — no recompute per step);
+        # each chunk carries its batch-row span so per-row completion
+        # instants can be attributed back to the rows (and, one layer
+        # up, to the requests) it served
         offsets = np.concatenate([[0], np.cumsum(rows)])
         chunks: list[list[dict]] = []
         chunk_rows: list[list[int]] = []
+        chunk_spans: list[list[list[tuple[int, int]]]] = []
         for gi, g in enumerate(self.groups):
             sizes = plan["chunks"][gi]
             lo = int(offsets[gi])
             group_chunks = []
+            group_spans = []
             for s in sizes:
                 sl = jax.tree.map(lambda x, lo=lo, s=s: x[lo:lo + s], batch)
                 group_chunks.append(constrain_leading(sl))
+                group_spans.append([(lo, s)])
                 lo += s
             chunks.append(group_chunks)
             chunk_rows.append(list(sizes))
+            chunk_spans.append(group_spans)
 
         t0 = self._now()
         n_groups = len(self.groups)
@@ -547,8 +571,13 @@ class ChunkedScheduler:
         done_rows = [0] * n_groups        # rows confirmed complete
         done_chunks = [0] * n_groups      # planned chunks confirmed complete
         failures: dict[int, str] = {}
+        # absolute completion instant per batch row (the serving layer
+        # turns these into per-request latencies); rows of a failed
+        # chunk stay NaN until their re-dispatch completes — drain
+        # threads write disjoint slices, so no lock is needed
+        row_done_at = np.full(n, np.nan)
 
-        def record(gi: int, res, r: int) -> None:
+        def record(gi: int, res, r: int, spans) -> None:
             # emulated results expose their exact completion instant;
             # real arrays are timestamped as their drain returns
             ready = result_ready_time(res)
@@ -566,6 +595,8 @@ class ChunkedScheduler:
             t_done[gi] = now - t_start[gi]
             t_done_abs[gi] = max(t_done_abs[gi], now - t0)
             done_rows[gi] += r
+            for start, cnt in spans:
+                row_done_at[start:start + cnt] = now
 
         def fail(gi: int, err: BaseException | str) -> None:
             failures[gi] = err if isinstance(err, str) \
@@ -576,18 +607,18 @@ class ChunkedScheduler:
                                          args={"error": failures[gi]})
 
         def drain_one(gi: int) -> bool:
-            res, r, planned = pending[gi].popleft()
+            res, r, planned, spans = pending[gi].popleft()
             try:
                 self._block(res)
             except Exception as e:  # noqa: BLE001 — demotion boundary
                 fail(gi, e)
                 return False
-            record(gi, res, r)
+            record(gi, res, r, spans)
             if planned:
                 done_chunks[gi] += 1
             return True
 
-        def dispatch(gi: int, chunk, r: int, planned: bool) -> bool:
+        def dispatch(gi: int, chunk, r: int, planned: bool, spans) -> bool:
             if t_start[gi] is None:
                 t_start[gi] = self._now()
             if self._obs is not None:
@@ -598,7 +629,7 @@ class ChunkedScheduler:
             except Exception as e:  # noqa: BLE001 — demotion boundary
                 fail(gi, e)
                 return False
-            pending[gi].append((res, r, planned))
+            pending[gi].append((res, r, planned, spans))
             return True
 
         # interleave dispatch round-robin by chunk index so every group
@@ -610,7 +641,8 @@ class ChunkedScheduler:
                     continue
                 if len(pending[gi]) >= self.inflight and not drain_one(gi):
                     continue
-                dispatch(gi, chunks[gi][ci], chunk_rows[gi][ci], True)
+                dispatch(gi, chunks[gi][ci], chunk_rows[gi][ci], True,
+                         chunk_spans[gi][ci])
 
         # drain each group in its own worker thread: block_until_ready
         # releases the GIL, so every group's completion is timestamped
@@ -642,7 +674,7 @@ class ChunkedScheduler:
         # -- demote failed groups and re-dispatch their orphans ------------
         redispatched = 0
         if failures:
-            orphans: list[tuple] = []       # (chunk, rows) pairs
+            orphans: list[tuple] = []       # (chunk, rows, spans) triples
             for gi in failures:
                 if self.controller.live[gi]:
                     if self.controller.n_live == 1:
@@ -650,7 +682,8 @@ class ChunkedScheduler:
                             f"all device groups failed: {failures}")
                     self.drop_group(gi, reason=failures[gi])
                 orphans.extend(zip(chunks[gi][done_chunks[gi]:],
-                                   chunk_rows[gi][done_chunks[gi]:]))
+                                   chunk_rows[gi][done_chunks[gi]:],
+                                   chunk_spans[gi][done_chunks[gi]:]))
             attempts = 0
             while orphans:
                 attempts += 1
@@ -660,29 +693,31 @@ class ChunkedScheduler:
                 merged = jax.tree.map(
                     lambda *xs: np.concatenate([np.asarray(x) for x in xs],
                                                axis=0),
-                    *[c for c, _ in orphans])
-                n_orphan = sum(r for _, r in orphans)
+                    *[c for c, _, _ in orphans])
+                merged_spans = [sp for _, _, spans in orphans for sp in spans]
+                n_orphan = sum(r for _, r, _ in orphans)
                 orphans = []
                 live_idx = [i for i in range(n_groups)
                             if self.controller.live[i]]
                 lo = 0
-                retry: list[tuple[int, dict, int]] = []
+                retry: list[tuple[int, dict, int, list]] = []
                 for gi, r in self._redispatch_split(n_orphan, live_idx):
                     sl = jax.tree.map(
                         lambda x, lo=lo, r=r: x[lo:lo + r], merged)
-                    retry.append((gi, constrain_leading(sl), r))
+                    retry.append((gi, constrain_leading(sl), r,
+                                  _slice_spans(merged_spans, lo, r)))
                     lo += r
-                for gi, chunk, r in retry:
+                for gi, chunk, r, spans in retry:
                     if gi in failures and not self.controller.live[gi]:
-                        orphans.append((chunk, r))
+                        orphans.append((chunk, r, spans))
                         continue
-                    if not dispatch(gi, chunk, r, False):
+                    if not dispatch(gi, chunk, r, False, spans):
                         self._demote_if_live(gi, failures)
-                        orphans.append((chunk, r))
+                        orphans.append((chunk, r, spans))
                         continue
                     if not drain_one(gi):
                         self._demote_if_live(gi, failures)
-                        orphans.append((chunk, r))
+                        orphans.append((chunk, r, spans))
             # rows that completed via re-dispatch rather than the plan
             redispatched = sum(done_rows) - sum(
                 sum(chunk_rows[gi][:done_chunks[gi]])
@@ -705,6 +740,11 @@ class ChunkedScheduler:
             "failures": {self.groups[gi].name: msg
                          for gi, msg in failures.items()},
             "redispatched_rows": int(redispatched),
+            # absolute completion instant of every batch row on the
+            # step's clock (NaN only for rows the step could not
+            # complete, which raises above) — the request-level serving
+            # layer (repro.serve) retires per-request latencies from it
+            "row_done_at": row_done_at,
         }
         self.history.append(rec)
         if self._obs is not None:

@@ -499,6 +499,11 @@ def test_check_required_order():
 def test_schema_file_matches_event_catalog():
     schema = json.loads((REPO / "docs" / "obs_schema.json").read_text())
     assert set(schema["journal"]["kinds"]) == set(EVENT_KINDS)
+    # the serving layer's kinds ride in the same catalog: the schema file
+    # and EVENT_KINDS must grow together (see docs/observability.md table)
+    for kind in ("request_admitted", "request_shed", "request_retired",
+                 "request_retried"):
+        assert kind in schema["journal"]["kinds"]
 
 
 # -- report ----------------------------------------------------------------------
