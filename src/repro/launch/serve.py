@@ -31,6 +31,15 @@ otherwise real prefill+decode serves each formed batch.
 ``--tune-batcher`` tunes the batcher knobs through ``TuningSession``
 (persisted in ``--batcher-store``) before serving; ``docs/serving.md``
 documents the policies.
+
+Crash durability (``runtime.checkpoint``; sim rig only): ``--wal PATH``
+appends every admit/retire/step to a write-ahead request log and
+``--snapshot PATH`` checkpoints the engine's soft state; after a crash
+(scripted via ``--fault-plan 'crash:0@N'``, raising by default or a
+real ``SIGKILL`` with ``--crash-sigkill``) the same command plus
+``--resume`` replays unretired requests and finishes the run with every
+admitted request accounted — the CI recover-smoke drill;
+``docs/resilience.md`` documents the protocol.
 """
 
 from __future__ import annotations
@@ -420,6 +429,24 @@ def main() -> None:
     ap.add_argument("--batcher-store", default=None, metavar="PATH",
                     help="TuningStore JSON caching tuned batcher configs "
                     "per workload signature")
+    ap.add_argument("--wal", default=None, metavar="PATH",
+                    help="write-ahead request log for --serve-requests "
+                    "(sim rig): every admit/retire/step is appended "
+                    "before the engine proceeds, so a crashed run can "
+                    "restart with --resume (docs/resilience.md)")
+    ap.add_argument("--snapshot", default=None, metavar="PATH",
+                    help="periodic checksummed snapshot of the engine's "
+                    "soft state (controller shares, kill-switch, service "
+                    "estimator) next to the --wal")
+    ap.add_argument("--resume", action="store_true",
+                    help="recover from --wal (and --snapshot if given) "
+                    "before serving: unretired admitted requests replay "
+                    "through admission, the clock and fault plan fast-"
+                    "forward to the crash point")
+    ap.add_argument("--crash-sigkill", action="store_true",
+                    help="scripted crash faults (--fault-plan 'crash:0@N') "
+                    "kill the process with SIGKILL instead of raising — "
+                    "the real-process recovery drill")
     args = ap.parse_args()
     from ..obs import Observer, configure
     if args.log_level:
@@ -439,10 +466,26 @@ def main() -> None:
     if args.serve_requests:
         from ..serve import BatcherConfig, make_sim_engine, tune_batcher
         observer = None
+        journal_sink = None
         if args.trace_out or args.journal_out or args.metrics_out:
             observer = Observer()
+            if args.journal_out:
+                # stream every event as it happens (line-buffered +
+                # per-event flush): a SIGKILL mid-run still leaves the
+                # journal on disk up to the last decision.  save_journal
+                # rewrites the same bytes at clean exit.
+                from pathlib import Path
+                Path(args.journal_out).parent.mkdir(parents=True,
+                                                    exist_ok=True)
+                journal_sink = open(args.journal_out, "w", buffering=1)
+                observer.journal.sink = journal_sink
             configure(journal=observer.journal)
         sim = bool(args.fault_plan or args.sim_serve)
+        if (args.wal or args.resume) and not sim:
+            ap.error("--wal/--resume need the sim rig "
+                     "(--sim-serve or --fault-plan)")
+        if args.resume and not args.wal:
+            ap.error("--resume needs --wal")
         bcfg = None
         if args.tune_batcher:
             # tune on the sim rig (cheap, deterministic); the store
@@ -472,16 +515,33 @@ def main() -> None:
                      f"{100 * tuned.experiments_fraction:.1f}% of space"
                      f"{', cached' if tuned.from_cache else ''})")
         if sim:
+            from ..runtime.checkpoint import SimulatedCrash
             from ..runtime.simulate import parse_fault_plan
             plan = parse_fault_plan(args.fault_plan) \
                 if args.fault_plan else None
-            engine = make_sim_engine(n_requests=args.serve_requests,
-                                     rate_rps=args.request_rate,
-                                     seed=args.serve_seed, fault_plan=plan,
-                                     guard=args.guard or bool(plan),
-                                     batcher_config=bcfg,
-                                     observer=observer)
-            s = engine.run()
+            engine = make_sim_engine(
+                n_requests=args.serve_requests,
+                rate_rps=args.request_rate,
+                seed=args.serve_seed, fault_plan=plan,
+                guard=args.guard or bool(plan),
+                batcher_config=bcfg, observer=observer,
+                wal=args.wal, snapshot=args.snapshot,
+                resume=args.resume,
+                crash_mode="sigkill" if args.crash_sigkill else "raise")
+            try:
+                s = engine.run()
+            except SimulatedCrash as exc:
+                # scripted crash drill (crash_mode="raise"): the WAL and
+                # streamed journal are already durable — flush what we
+                # have and exit with the drill's sentinel code so CI can
+                # assert the crash actually fired before the restart
+                log.warning(f"simulated crash: {exc}",
+                            steps=engine.steps)
+                if engine.wal is not None:
+                    engine.wal.sync()
+                if journal_sink is not None:
+                    journal_sink.close()
+                raise SystemExit(17)
         else:
             devs = jax.devices()[:max(args.batch, 1)]
             if 0 < args.slow < len(devs):
@@ -495,15 +555,23 @@ def main() -> None:
                 gen=args.gen, seed=args.serve_seed, batcher_config=bcfg,
                 guard=args.guard, observer=observer)
             s = out["summary"]
+        replayed = (f"  {s['replayed']} replayed"
+                    if s.get("replayed") else "")
         log.info(f"serve: {s['completed']}/{s['requests']} completed  "
                  f"{s['shed']} shed {s['shed_reasons']}  "
-                 f"{s['retries']} retries  "
+                 f"{s['retries']} retries{replayed}  "
                  f"e2e p99 {s.get('e2e_p99', float('nan')):.4f}s")
         if observer is not None:
             if args.trace_out:
                 path = observer.save_trace(args.trace_out)
                 log.info(f"trace: {path} ({len(observer.tracer)} events)")
             if args.journal_out:
+                # close the stream first; save() rewrites the identical
+                # bytes (plus anything the sink never saw on a non-crash
+                # path — there is none with flush_every=1)
+                if journal_sink is not None:
+                    journal_sink.close()
+                    observer.journal.sink = None
                 path = observer.save_journal(args.journal_out)
                 log.info(f"journal: {path} "
                          f"({len(observer.journal)} events)")

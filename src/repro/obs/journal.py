@@ -30,6 +30,12 @@ fields of each):
     (``repro.serve``): one event per admission decision, per shed
     (with the policy reason), per completed retirement (with the
     queue-delay/service decomposition) and per post-failure retry;
+  * ``request_replayed`` / ``wal_recovered`` / ``snapshot_saved`` /
+    ``store_quarantined`` — the crash-durability layer
+    (``runtime.checkpoint``): one event per request rebuilt from the
+    write-ahead log after a restart (with its requeue/shed
+    disposition), one summary per WAL recovery, one per periodic
+    soft-state snapshot, and one per corrupt durable file moved aside;
   * ``log`` — a structured-logger line routed into the journal sink.
 """
 
@@ -51,6 +57,8 @@ EVENT_KINDS = frozenset({
     "surrogate_refit",
     "request_admitted", "request_shed", "request_retired",
     "request_retried",
+    "request_replayed", "wal_recovered", "snapshot_saved",
+    "store_quarantined",
     "log",
 })
 
@@ -58,15 +66,21 @@ EVENT_KINDS = frozenset({
 class Journal:
     """Thread-safe append-only event list with an optional live sink."""
 
-    def __init__(self, *, clock=None, sink: IO[str] | None = None):
+    def __init__(self, *, clock=None, sink: IO[str] | None = None,
+                 flush_every: int = 1):
         """``clock`` is anything with ``now() -> float`` seconds (share
         the scheduler's ``VirtualClock`` for deterministic timestamps);
         ``sink`` is an optional open text stream that receives each
-        event as one JSON line the moment it is recorded (for tailing
-        a live run); :meth:`save` writes the full JSONL afterwards
-        either way."""
+        event as one JSON line the moment it is recorded — with the
+        default ``flush_every=1`` each line is flushed as written, so a
+        crash loses nothing already journaled (larger values batch the
+        flushes for hot paths); :meth:`save` writes the full JSONL
+        afterwards either way, byte-identical to the streamed lines."""
+        if flush_every < 1:
+            raise ValueError("flush_every must be >= 1")
         self.clock = clock
         self.sink = sink
+        self.flush_every = int(flush_every)
         self.events: list[dict] = []
         self._lock = threading.Lock()
 
@@ -88,6 +102,8 @@ class Journal:
             self.events.append(rec)
             if self.sink is not None:
                 self.sink.write(json.dumps(rec, default=str) + "\n")
+                if len(self.events) % self.flush_every == 0:
+                    self.sink.flush()
         return rec
 
     def by_kind(self, kind: str) -> list[dict]:

@@ -40,10 +40,23 @@ closed at run time (usage guide: ``docs/runtime.md``):
     :class:`~repro.runtime.simulate.VirtualClock` +
     :class:`~repro.runtime.simulate.FaultPlan` /
     :class:`~repro.runtime.simulate.FaultInjector` script failures
-    (kill/slow/transient/recover) against the serial-device sim or real
-    dispatch, deterministically.
+    (kill/slow/transient/recover, plus process-level crash/torn)
+    against the serial-device sim or real dispatch, deterministically.
+
+``checkpoint`` — crash durability (``docs/resilience.md``).
+    :class:`~repro.runtime.checkpoint.WalWriter` appends a CRC'd
+    write-ahead request log that survives ``kill -9`` and truncates
+    torn tails on reopen; :func:`~repro.runtime.checkpoint.save_snapshot`
+    / :func:`~repro.runtime.checkpoint.load_snapshot` checkpoint soft
+    state with checksums (corruption quarantines via
+    :func:`~repro.runtime.checkpoint.quarantine` instead of crashing);
+    :class:`~repro.runtime.checkpoint.MeasurementLedger` makes tuning
+    runs resumable — a crashed search replays its measured prefix from
+    the ledger instead of re-spending the budget.
 """
 
+from .checkpoint import (MeasurementLedger, SimulatedCrash, WalWriter,
+                         load_snapshot, quarantine, read_wal, save_snapshot)
 from .feedback import OnlineSurrogateLoop
 from .guard import KillSwitch, ServeGuard, fallback_from_store
 from .scheduler import ChunkedScheduler, EwmaController, ewma_rebalance
@@ -56,6 +69,8 @@ from .stream import StreamingPipeline, dna_stream_builder
 __all__ = [
     "ChunkedScheduler", "EwmaController", "ewma_rebalance",
     "KillSwitch", "ServeGuard", "fallback_from_store",
+    "MeasurementLedger", "SimulatedCrash", "WalWriter",
+    "load_snapshot", "quarantine", "read_wal", "save_snapshot",
     "FaultInjector", "FaultPlan", "GroupFailure", "VirtualClock",
     "make_serial_sim_builder", "parse_fault_plan", "sim_skew_groups",
     "OnlineSurrogateLoop",

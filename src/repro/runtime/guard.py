@@ -130,6 +130,25 @@ class KillSwitch:
         self._times.append(t_step)
         return "ok"
 
+    # -- durability (runtime.checkpoint snapshots) -------------------------
+    def state_dict(self) -> dict:
+        """JSON-ready recoverable state: baseline window + trip state
+        (the config knobs are reconstructed by the caller, not
+        persisted — a restart may legitimately retune them)."""
+        return {"times": [float(t) for t in self._times],
+                "tripped": bool(self.tripped),
+                "streak": int(self.streak),
+                "n_trips": int(self.n_trips)}
+
+    def load_state(self, state: dict) -> None:
+        """Restore a :meth:`state_dict` snapshot; the baseline window
+        refills from the saved tail (bounded by ``window``)."""
+        self._times.clear()
+        self._times.extend(float(t) for t in state.get("times", ()))
+        self.tripped = bool(state.get("tripped", False))
+        self.streak = int(state.get("streak", 0))
+        self.n_trips = int(state.get("n_trips", 0))
+
 
 def fallback_from_store(store, workload: dict,
                         n_groups: int = 2) -> np.ndarray | None:
@@ -231,6 +250,26 @@ class ServeGuard:
             "n_live": ctrl.n_live,
             "degraded": self.degraded,
         }
+
+    # -- durability (runtime.checkpoint snapshots) -------------------------
+    def state_dict(self) -> dict:
+        """JSON-ready recoverable state: the kill switch plus the
+        learned known-good snapshot the fallback resolves to."""
+        return {
+            "switch": self.switch.state_dict(),
+            "best_shares": None if self._best_shares is None
+            else [float(s) for s in self._best_shares],
+            "best_t": None if self._best_t == float("inf")
+            else float(self._best_t),
+        }
+
+    def load_state(self, state: dict) -> None:
+        self.switch.load_state(state.get("switch", {}))
+        bs = state.get("best_shares")
+        self._best_shares = None if bs is None \
+            else np.asarray(bs, np.float64)
+        bt = state.get("best_t")
+        self._best_t = float("inf") if bt is None else float(bt)
 
     def _fallback_shares(self) -> np.ndarray:
         ctrl = self.scheduler.controller

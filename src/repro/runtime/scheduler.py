@@ -214,6 +214,26 @@ class EwmaController:
         for i, s in enumerate(self.shares):
             m.gauge(f"controller.share.g{i}").set(round(float(s), 6))
 
+    # -- durability (runtime.checkpoint snapshots) -------------------------
+    def state_dict(self) -> dict:
+        """JSON-ready recoverable state: shares + live mask."""
+        return {"shares": [float(s) for s in self.shares],
+                "live": [bool(x) for x in self.live]}
+
+    def load_state(self, state: dict) -> None:
+        """Restore a :meth:`state_dict` snapshot (re-projected, so a
+        hand-edited or stale snapshot still yields a valid simplex)."""
+        live = np.asarray(state["live"], dtype=bool)
+        shares = np.asarray(state["shares"], np.float64)
+        if live.shape != (self.n_groups,) \
+                or shares.shape != (self.n_groups,):
+            raise ValueError("snapshot group count mismatch")
+        if not live.any():
+            raise ValueError("snapshot has no live group")
+        self.live = live.copy()
+        self.shares = shares.copy()
+        self._project()
+
 
 class ChunkedScheduler:
     """Split each batch into chunks, overlap dispatch across N groups,

@@ -157,13 +157,17 @@ def sim_skew_groups(skew: int = 3, n_fast: int = 4, n_slow: int = 4,
 
 # -- fault injection ------------------------------------------------------------
 
-_FAULT_KINDS = ("kill", "slow", "transient", "recover")
+# device-level kinds target a group; process-level kinds (crash, torn)
+# take down the whole process — group is carried but ignored
+_FAULT_KINDS = ("kill", "slow", "transient", "recover", "crash", "torn")
+_PROCESS_KINDS = ("crash", "torn")
 
 
 @dataclass(frozen=True)
 class FaultEvent:
     """One scripted event: at scheduler step ``step``, do ``kind`` to
-    group index ``group`` (``factor`` scales per-row time for slow)."""
+    group index ``group`` (``factor`` scales per-row time for slow;
+    process-level kinds ignore ``group``)."""
 
     step: int
     kind: str
@@ -223,6 +227,24 @@ class FaultPlan:
         is attached to a scheduler) restore the group's membership."""
         return self._add(step=at, kind="recover", group=group)
 
+    def crash(self, *, at: int) -> "FaultPlan":
+        """Process fault at step ``at``: the injector's ``crash_mode``
+        decides how it dies — ``"raise"`` throws
+        :class:`~repro.runtime.checkpoint.SimulatedCrash` out of the
+        serving loop (the in-process drill), ``"sigkill"`` delivers a
+        real ``SIGKILL`` to the process (the subprocess drill).  On a
+        resumed run, :meth:`FaultInjector.fast_forward` suppresses
+        already-fired crashes so the plan does not re-kill the
+        recovery."""
+        return self._add(step=at, kind="crash", group=0)
+
+    def torn(self, *, at: int) -> "FaultPlan":
+        """Torn-write process fault at step ``at``: flush a *partial*
+        record to the attached WAL (:meth:`FaultInjector.attach_wal`),
+        then die exactly like :meth:`crash` — the restart must detect
+        and truncate the torn tail."""
+        return self._add(step=at, kind="torn", group=0)
+
     def at(self, step: int) -> list[FaultEvent]:
         return [e for e in self.events if e.step == step]
 
@@ -237,13 +259,15 @@ def parse_fault_plan(spec: str) -> FaultPlan:
     Comma-separated events, each ``kind:group@step`` with an extra
     ``:factor`` for slow::
 
-        kill:0@3,slow:1@9:4,transient:0@5,recover:0@12
+        kill:0@3,slow:1@9:4,transient:0@5,recover:0@12,crash:0@8
 
     kills group 0 at step 3, slows group 1 to 1/4 speed from step 9,
     raises one transient on group 0 at step 5, recovers group 0 at step
-    12.  This is the surface behind ``launch/serve.py --fault-plan``
-    (the CI fault drill) — the parsed plan is the same object the tests
-    build by chaining, so a drill spec is exactly reproducible in code.
+    12.  Process-level kinds (``crash``, ``torn``) carry a group index
+    for spelling uniformity but ignore it.  This is the surface behind
+    ``launch/serve.py --fault-plan`` (the CI fault drill) — the parsed
+    plan is the same object the tests build by chaining, so a drill
+    spec is exactly reproducible in code.
     """
     plan = FaultPlan()
     for part in spec.split(","):
@@ -271,6 +295,10 @@ def parse_fault_plan(spec: str) -> FaultPlan:
             plan.transient(group, at=step)
         elif kind == "recover":
             plan.recover(group, at=step)
+        elif kind == "crash":
+            plan.crash(at=step)
+        elif kind == "torn":
+            plan.torn(at=step)
         else:
             raise ValueError(f"unknown fault kind {kind!r} in {part!r}; "
                              f"expected one of {_FAULT_KINDS}")
@@ -289,27 +317,85 @@ class FaultInjector:
     scheduler (or guard) so recover events call ``restore_group`` —
     demotion needs no attachment: the raised ``GroupFailure`` triggers
     it inside ``ChunkedScheduler.step``.
+
+    Process-level events (``crash``/``torn``) fire inside :meth:`tick`
+    — before the step's dispatch, outside the engine's failure
+    handling, so they take the whole process down rather than demoting
+    a group.  ``crash_mode="raise"`` throws ``SimulatedCrash`` (the
+    in-process drill: the caller's ``except`` is the "restart");
+    ``crash_mode="sigkill"`` delivers a real ``SIGKILL`` (the
+    subprocess drill: nothing downstream of the kernel runs).  A
+    ``torn`` event additionally flushes a partial record to the WAL
+    attached via :meth:`attach_wal` first.  On resume,
+    :meth:`fast_forward` replays the pre-crash steps' persistent
+    effects (kills, slows) and marks fired process faults as spent.
     """
 
-    def __init__(self, plan: FaultPlan, groups: "list[DeviceGroup]"):
+    def __init__(self, plan: FaultPlan, groups: "list[DeviceGroup]", *,
+                 crash_mode: str = "raise"):
         for ev in plan.events:
-            if ev.group >= len(groups):
+            if ev.kind not in _PROCESS_KINDS and ev.group >= len(groups):
                 raise ValueError(f"fault event {ev} references group "
                                  f"{ev.group}, but only {len(groups)} "
                                  "groups exist")
+        if crash_mode not in ("raise", "sigkill"):
+            raise ValueError("crash_mode must be 'raise' or 'sigkill'")
         self.plan = plan
         self.groups = list(groups)
+        self.crash_mode = crash_mode
         self.step = -1                       # tick() moves to step 0
         self._dead: set[int] = set()
         self._slow: dict[int, float] = {}
         self._transient: set[int] = set()
+        self._spent_crashes: set[int] = set()   # steps whose crash fired
         self._target = None
+        self._wal = None
 
     def attach(self, target) -> "FaultInjector":
         """``target`` must expose ``restore_group(i)`` (a
         ``ChunkedScheduler`` or ``ServeGuard``); recover events call it."""
         self._target = target
         return self
+
+    def attach_wal(self, wal) -> "FaultInjector":
+        """``wal`` must expose ``append_torn(kind, **fields)`` (a
+        ``runtime.checkpoint.WalWriter``); ``torn`` events flush a
+        partial record through it before dying."""
+        self._wal = wal
+        return self
+
+    def fast_forward(self, n_steps: int) -> "FaultInjector":
+        """Resume support: re-apply steps ``0..n_steps-1`` — persistent
+        device faults (kill/slow/recover) re-establish their state,
+        one-shot transients are consumed silently, and process faults
+        are marked spent so the crash that ended the previous run does
+        not re-fire when the resumed run passes its step."""
+        for _ in range(n_steps):
+            self.step += 1
+            for ev in self.plan.at(self.step):
+                if ev.kind == "kill":
+                    self._dead.add(ev.group)
+                elif ev.kind == "slow":
+                    if ev.factor == 1.0:
+                        self._slow.pop(ev.group, None)
+                    else:
+                        self._slow[ev.group] = ev.factor
+                elif ev.kind == "recover":
+                    self._dead.discard(ev.group)
+                    self._slow.pop(ev.group, None)
+                elif ev.kind in _PROCESS_KINDS:
+                    self._spent_crashes.add(ev.step)
+        return self
+
+    def _die(self, ev: FaultEvent) -> None:
+        self._spent_crashes.add(ev.step)
+        if self.crash_mode == "sigkill":
+            import os
+            import signal
+            os.kill(os.getpid(), signal.SIGKILL)
+        from .checkpoint import SimulatedCrash
+        raise SimulatedCrash(
+            f"injected {ev.kind} fault at step {ev.step}")
 
     def tick(self) -> list[FaultEvent]:
         """Advance to the next scheduler step; apply its events."""
@@ -331,6 +417,11 @@ class FaultInjector:
                 self._transient.discard(ev.group)
                 if self._target is not None:
                     self._target.restore_group(ev.group)
+            elif ev.kind in _PROCESS_KINDS \
+                    and ev.step not in self._spent_crashes:
+                if ev.kind == "torn" and self._wal is not None:
+                    self._wal.append_torn("admit", torn=True)
+                self._die(ev)
         return fired
 
     # -- dispatch-side state -----------------------------------------------

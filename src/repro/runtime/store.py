@@ -24,6 +24,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import zipfile
 from dataclasses import asdict
 from pathlib import Path
 from typing import Any, Mapping
@@ -130,7 +131,36 @@ class TuningStore:
         self.devices = devices          # pin topology, or None for live
         self._data: dict[str, dict] = {}
         if self.path.exists():
-            self._data = json.loads(self.path.read_text())
+            self._data = self._load_or_quarantine()
+
+    def _load_or_quarantine(self) -> dict:
+        """Load the JSON store, surviving corruption.
+
+        A truncated/unparsable file, a non-object payload, or a
+        checksummed file whose digest mismatches is moved aside to
+        ``<name>.corrupt-<sha8>`` (``runtime.checkpoint.quarantine``)
+        with a structured warning, and the store starts fresh — a
+        corrupt cache must never take the tuner down with it.  Both
+        layouts load: the legacy flat ``{sig: entry}`` and the
+        checksummed ``{"checksum", "entries"}`` that :meth:`_flush`
+        writes.
+        """
+        from .checkpoint import quarantine
+        try:
+            data = json.loads(self.path.read_text())
+            if not isinstance(data, dict):
+                raise ValueError("store payload is not an object")
+            if "entries" in data and "checksum" in data:
+                entries = data["entries"]
+                if not isinstance(entries, dict):
+                    raise ValueError("store entries is not an object")
+                if data["checksum"] != _sha(entries):
+                    raise ValueError("store checksum mismatch")
+                return entries
+            return data                         # legacy flat layout
+        except (ValueError, UnicodeDecodeError) as exc:
+            quarantine(self.path, reason=f"tuning store: {exc}")
+            return {}
 
     # -- keys --------------------------------------------------------------
     def signature(self, space: ConfigSpace,
@@ -181,9 +211,13 @@ class TuningStore:
         return len(self._data)
 
     def _flush(self) -> None:
+        # Checksummed envelope: the loader verifies the digest against the
+        # entries so a torn write surfaces as quarantine, not silent
+        # corruption.  Written atomically (tmp + rename).
         self.path.parent.mkdir(parents=True, exist_ok=True)
         tmp = self.path.with_suffix(self.path.suffix + ".tmp")
-        tmp.write_text(json.dumps(self._data, indent=1, sort_keys=True))
+        payload = {"checksum": _sha(self._data), "entries": self._data}
+        tmp.write_text(json.dumps(payload, indent=1, sort_keys=True))
         os.replace(tmp, self.path)
 
     # -- observation side-car (NPZ) ----------------------------------------
@@ -201,5 +235,12 @@ class TuningStore:
         p = self._npz_path(sig)
         if not p.exists():
             return None
-        with np.load(p) as z:
-            return {k: z[k] for k in z.files}
+        try:
+            with np.load(p) as z:
+                return {k: z[k] for k in z.files}
+        except (ValueError, OSError, zipfile.BadZipFile) as exc:
+            # A torn NPZ side-car must not take the feedback loop down:
+            # quarantine it and report "no observations" (cold start).
+            from .checkpoint import quarantine
+            quarantine(p, reason=f"observation side-car: {exc}")
+            return None

@@ -104,6 +104,15 @@ class ServiceEstimator:
         behind ``queued_rows`` rows completes."""
         return self.per_row_s * (queued_rows + rows)
 
+    # -- durability (runtime.checkpoint snapshots) -------------------------
+    def state_dict(self) -> dict:
+        return {"per_row_s": float(self.per_row_s),
+                "n_obs": int(self.n_obs)}
+
+    def load_state(self, state: dict) -> None:
+        self.per_row_s = float(state["per_row_s"])
+        self.n_obs = int(state["n_obs"])
+
 
 @dataclass(frozen=True)
 class SloPolicy:

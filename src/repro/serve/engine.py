@@ -36,9 +36,24 @@ The loop ends when the source is exhausted and the queue is drained;
 every admitted request is then terminal (completed or shed with a
 reason) — the zero-lost-requests invariant the fault drill asserts.
 
+**Crash durability** (``docs/resilience.md``): with ``wal=`` the engine
+appends an ``admit`` record the moment a request is admitted (and again
+on each retry re-queue, so the retry budget survives a restart) and a
+``retire`` record at every terminal transition; a ``step`` record per
+scheduler step pins the simulated clock and the fault plan's position.
+``snapshot_path=`` adds periodic checksummed snapshots of the soft
+state the WAL does not carry (controller shares + live mask, kill
+switch, guard fallback, service estimator).  After a crash,
+:meth:`ServeEngine.restore` replays the WAL: admitted-but-unretired
+requests are rebuilt (``replayed`` marker set) and re-enter admission —
+at-least-once execution, exactly-once terminal accounting (exactly one
+valid ``retire`` per rid across both runs' WAL, which resumes in
+place).
+
 ``make_sim_engine`` wires the whole stack onto the deterministic sim
 rig (skewed fake device groups, ``VirtualClock``, optional
-``FaultPlan``), shared by the bench, the CLI drill and the tests.
+``FaultPlan``), shared by the bench, the CLI drill and the tests; with
+``wal=``/``resume=True`` it is also the crash-recovery rig.
 """
 
 from __future__ import annotations
@@ -49,6 +64,7 @@ from typing import Callable
 import numpy as np
 
 from ..obs import as_observer
+from ..runtime.checkpoint import WalWriter, load_snapshot, save_snapshot
 from ..runtime.guard import ServeGuard
 from ..runtime.scheduler import ChunkedScheduler
 from ..runtime.simulate import (FaultInjector, FaultPlan, VirtualClock,
@@ -76,12 +92,18 @@ class ServeEngine:
                  payload_fn: Callable[[tuple[int, int], int], dict]
                  = _zeros_payload,
                  injector: FaultInjector | None = None,
-                 observer=None, max_steps: int | None = None):
+                 observer=None, max_steps: int | None = None,
+                 wal: WalWriter | None = None,
+                 snapshot_path=None, snapshot_every: int = 8):
         """``target`` is a ``ServeGuard`` (degraded-mode aware path) or
         a bare ``ChunkedScheduler``.  ``observer`` defaults to the
         scheduler's (so request events share the run's journal
         sequence); ``max_steps`` is a safety valve — when hit, the
-        remaining queue is shed as ``drained``."""
+        remaining queue is shed as ``drained``.  ``wal`` (an open
+        ``runtime.checkpoint.WalWriter``) makes every admission and
+        retirement durable; ``snapshot_path`` + ``snapshot_every``
+        checkpoint the soft state every N steps (see module
+        docstring)."""
         if isinstance(target, ServeGuard):
             self.guard: ServeGuard | None = target
             self.scheduler = target.scheduler
@@ -94,8 +116,14 @@ class ServeEngine:
         self.payload_fn = payload_fn
         self.injector = injector
         self.max_steps = max_steps
+        self.wal = wal
+        self.snapshot_path = snapshot_path
+        self.snapshot_every = max(int(snapshot_every), 1)
+        self.replayed = 0                  # requests re-queued on restore
         self.done: list[Request] = []      # terminal requests, any state
         self.steps = 0
+        if wal is not None and self.injector is not None:
+            self.injector.attach_wal(wal)
         self._obs = as_observer(observer) or self.scheduler._obs
         if self._obs is not None:
             m = self._obs.metrics
@@ -151,6 +179,9 @@ class ServeEngine:
             if reason is None:
                 req.admit(now)
                 self.batcher.push(req)
+                if self.wal is not None:
+                    self.wal.append("admit", **req.wal_fields(),
+                                    replayed=req.replayed)
                 self._count("serve.admitted")
                 self._j("request_admitted", rid=req.rid, rows=req.rows,
                         shape=list(req.shape), klass=req.klass,
@@ -161,6 +192,13 @@ class ServeEngine:
     def _shed(self, req: Request, now: float, reason: str) -> None:
         req.shed(now, reason)
         self.done.append(req)
+        if self.wal is not None:
+            # shed-at-the-door requests get a retire record too: the WAL
+            # then names every delivered rid, which is what fast-forwards
+            # the arrival source exactly on restore
+            self.wal.append("retire", rid=req.rid, status="shed",
+                            reason=reason, t_done=req.t_done,
+                            retries=req.retries)
         self._count(f"serve.shed.{reason}")
         self._j("request_shed", rid=req.rid, reason=reason, klass=req.klass,
                 retries=req.retries)
@@ -174,13 +212,16 @@ class ServeEngine:
                 else float(np.max(span))
             req.completed(t_done)
             self.done.append(req)
+            if self.wal is not None:
+                self.wal.append("retire", rid=req.rid, status="completed",
+                                t_done=req.t_done, retries=req.retries)
             self._count("serve.completed")
             if self._obs is not None:
                 self._h_queue.observe(req.queue_delay_s)
                 self._h_service.observe(req.service_s)
                 self._h_e2e.observe(req.latency_s)
             self._j("request_retired", rid=req.rid, klass=req.klass,
-                    retries=req.retries,
+                    retries=req.retries, replayed=req.replayed,
                     queue_delay_s=round(req.queue_delay_s, 9),
                     service_s=round(req.service_s, 9),
                     e2e_s=round(req.latency_s, 9),
@@ -195,6 +236,13 @@ class ServeEngine:
             if reason is None:
                 req.retry(now)
                 self.batcher.push(req)
+                if self.wal is not None:
+                    # a fresh admit record with the bumped retry count:
+                    # the latest admit per rid wins at replay, so the
+                    # retry budget is crash-durable (a request cannot
+                    # earn extra retries by crashing the process)
+                    self.wal.append("admit", **req.wal_fields(),
+                                    replayed=req.replayed)
                 self._count("serve.retried")
                 self._j("request_retried", rid=req.rid, retries=req.retries,
                         error=error)
@@ -232,6 +280,113 @@ class ServeEngine:
         self._retire(fb, rec)
         self._after_step(cap_before)
 
+    # -- durability ---------------------------------------------------------
+    def save_state_snapshot(self) -> None:
+        """Checksummed snapshot of the soft recoverable state — what the
+        WAL's request records cannot reconstruct: controller shares +
+        live mask, kill-switch baseline/trip state, the guard's learned
+        fallback, and the service estimator (``docs/resilience.md``)."""
+        state = {
+            "now": round(self._now(), 9),
+            "steps": self.steps,
+            "controller": self.scheduler.controller.state_dict(),
+            "estimator": self.admission.estimator.state_dict(),
+            "guard": None if self.guard is None else self.guard.state_dict(),
+        }
+        save_snapshot(self.snapshot_path, state)
+        self._j("snapshot_saved", step=self.steps,
+                wal_lsn=None if self.wal is None else self.wal.lsn)
+
+    def restore(self, records: list[dict], state: dict | None = None, *,
+                torn: bool = False) -> dict:
+        """Rebuild run state from a recovered WAL (+ optional snapshot).
+
+        The WAL is the source of truth for *hard* state — which rids
+        were delivered, which were retired, how far the clock and the
+        fault plan got; the snapshot restores the *soft* state
+        (controller/guard/estimator) when present and fresh.  Admitted-
+        but-unretired requests are rebuilt from their latest ``admit``
+        record (``replayed`` marker set, retry budget preserved) and
+        re-enter admission at the recovered instant: the ones that still
+        fit re-queue, the rest shed with a journaled reason — either
+        way every pre-crash admission reaches exactly one valid
+        ``retire`` record.  Returns a summary dict (also journaled as
+        ``wal_recovered``).
+        """
+        admits: dict[int, dict] = {}
+        retired: set[int] = set()
+        delivered: set[int] = set()
+        steps, now = 0, 0.0
+        for rec in records:
+            kind = rec.get("kind")
+            if kind == "admit":
+                admits[int(rec["rid"])] = rec          # latest wins
+                delivered.add(int(rec["rid"]))
+            elif kind == "retire":
+                retired.add(int(rec["rid"]))
+                delivered.add(int(rec["rid"]))
+                now = max(now, float(rec.get("t_done") or 0.0))
+            elif kind == "step":
+                steps = max(steps, int(rec["step"]))
+                now = max(now, float(rec["now"]))
+        if state is not None:
+            steps = max(steps, int(state.get("steps", 0)))
+            now = max(now, float(state.get("now", 0.0)))
+            self.scheduler.controller.load_state(state["controller"])
+            self.admission.estimator.load_state(state["estimator"])
+            if self.guard is not None and state.get("guard") is not None:
+                self.guard.load_state(state["guard"])
+        self.steps = steps
+        clock = self.scheduler.clock
+        if clock is not None and hasattr(clock, "advance_to"):
+            clock.advance_to(now)
+        if self.injector is not None:
+            # re-apply the pre-crash fault timeline: persistent device
+            # faults re-establish, fired process faults are spent.  The
+            # +1 covers the tick that died mid-flight — its step record
+            # was never written, but its events (including the crash)
+            # all fired before the process went down.
+            self.injector.fast_forward(steps + 1)
+        # groups the snapshot remembers as dead re-run the scheduler's
+        # demotion (plan-cache keying, journal) — straight on the
+        # scheduler, not the guard, so the restored kill-switch baseline
+        # is not reset by a membership "change" that is only a restore
+        for i, live in enumerate(self.scheduler.controller.live):
+            if not live:
+                self.scheduler.controller.live[i] = True  # let drop re-run
+                self.scheduler.drop_group(i, reason="wal-restore")
+        n_requeued = n_shed = 0
+        now = self._now()
+        degraded = self._degraded()
+        for rid in sorted(set(admits) - retired):
+            req = Request.from_wal(admits[rid])
+            self.replayed += 1
+            reason = self.admission.admit(req, now,
+                                          self.batcher.queued_rows,
+                                          degraded=degraded)
+            self._j("request_replayed", rid=req.rid, rows=req.rows,
+                    retries=req.retries,
+                    disposition="requeued" if reason is None else reason)
+            if reason is None:
+                req.admit(now)
+                self.batcher.push(req)
+                self._count("serve.replayed")
+                n_requeued += 1
+            else:
+                self._shed(req, now, reason)
+                n_shed += 1
+        # the source delivers rids in order: everything the WAL names
+        # was handed out before the crash
+        fast_forward_to = max(delivered, default=-1) + 1
+        self.source._next = max(self.source._next, fast_forward_to)
+        out = {"wal_records": len(records), "admitted": len(admits),
+               "retired": len(retired), "replayed": self.replayed,
+               "requeued": n_requeued, "shed_on_replay": n_shed,
+               "steps": self.steps, "now": round(now, 9),
+               "torn": bool(torn)}
+        self._j("wal_recovered", **out)
+        return out
+
     # -- run ---------------------------------------------------------------
     def run(self) -> dict:
         """Serve the whole source to drained; returns :meth:`summary`."""
@@ -253,12 +408,25 @@ class ServeEngine:
                 continue
             self._dispatch(fb)
             self.steps += 1
+            if self.wal is not None:
+                # pins the clock and the fault plan's position, so a
+                # restart resumes the exact simulated timeline even when
+                # the last snapshot is several steps stale
+                self.wal.append("step", step=self.steps,
+                                now=round(self._now(), 9))
+            if self.snapshot_path is not None \
+                    and self.steps % self.snapshot_every == 0:
+                self.save_state_snapshot()
             if self.max_steps is not None and self.steps >= self.max_steps:
                 now = self._now()
                 for req in list(self.batcher.queue):
                     self.batcher.remove([req])
                     self._shed(req, now, "drained")
                 break
+        if self.wal is not None:
+            self.wal.sync()
+        if self.snapshot_path is not None:
+            self.save_state_snapshot()
         return self.summary()
 
     def summary(self) -> dict:
@@ -273,6 +441,7 @@ class ServeEngine:
             "shed_rate": len(shed) / max(len(self.done), 1),
             "shed_reasons": {},
             "retries": sum(r.retries for r in self.done),
+            "replayed": self.replayed,
             "steps": self.steps,
             "slo_violations": sum(1 for r in completed if not r.slo_ok),
         }
@@ -302,7 +471,10 @@ def make_sim_engine(*, n_requests: int = 200, rate_rps: float = 400.0,
                     guard: bool = False, observer=None,
                     source: RequestSource | None = None,
                     row_quantum: int = 1,
-                    max_steps: int | None = None) -> ServeEngine:
+                    max_steps: int | None = None,
+                    wal=None, snapshot=None, snapshot_every: int = 8,
+                    resume: bool = False, crash_mode: str = "raise",
+                    wal_fsync_every: int = 1) -> ServeEngine:
     """The deterministic serving rig: skewed sim groups on a
     ``VirtualClock``, optionally fault-injected and guard-wrapped.
 
@@ -312,10 +484,18 @@ def make_sim_engine(*, n_requests: int = 200, rate_rps: float = 400.0,
     ``(4 + 4/3) / per_row_s`` rows/s ≈ 13.3k rows/s at the default
     ``per_row_s`` — pick ``rate_rps`` (x mean rows/request) relative to
     that for under/over-capacity regimes.
+
+    ``wal`` (a path) makes the run crash-durable; ``snapshot`` (a path)
+    adds the periodic soft-state checkpoint; ``resume=True`` recovers
+    both before serving (torn WAL tails truncate, corrupt snapshots
+    quarantine) and replays unretired requests — the crash-recovery
+    drill is "same call, plus ``resume=True``".  ``crash_mode`` selects
+    how scripted ``crash``/``torn`` faults die (``"raise"`` for the
+    in-process drill, ``"sigkill"`` for the real-subprocess one).
     """
     clock = VirtualClock()
     groups = sim_skew_groups(skew)
-    injector = FaultInjector(fault_plan, groups) \
+    injector = FaultInjector(fault_plan, groups, crash_mode=crash_mode) \
         if fault_plan is not None else None
     builder = make_serial_sim_builder(per_row_s, clock=clock,
                                       injector=injector)
@@ -344,6 +524,17 @@ def make_sim_engine(*, n_requests: int = 200, rate_rps: float = 400.0,
         policy = SloPolicy(max_queue_rows=bc.queue_depth_rows)
     admission = AdmissionController(policy, estimator=estimator)
     batcher = ContinuousBatcher(bc)
-    return ServeEngine(target, source=source, admission=admission,
-                       batcher=batcher, injector=injector, observer=obs,
-                       max_steps=max_steps)
+    wal_writer = WalWriter(wal, fsync_every=wal_fsync_every) \
+        if wal is not None else None
+    engine = ServeEngine(target, source=source, admission=admission,
+                         batcher=batcher, injector=injector, observer=obs,
+                         max_steps=max_steps, wal=wal_writer,
+                         snapshot_path=snapshot,
+                         snapshot_every=snapshot_every)
+    if resume:
+        if wal_writer is None:
+            raise ValueError("resume=True needs a wal path to recover from")
+        state = load_snapshot(snapshot) if snapshot is not None else None
+        engine.restore(wal_writer.recovered, state,
+                       torn=wal_writer.torn is not None)
+    return engine

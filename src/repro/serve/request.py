@@ -87,6 +87,11 @@ class Request:
     t_dispatch: float | None = None
     t_done: float | None = None
     shed_reason: str | None = field(default=None)
+    # True when this request was rebuilt from the write-ahead log after
+    # a crash and re-entered admission (at-least-once replay); completion
+    # records and journal events carry the marker so recovered lifecycles
+    # are distinguishable in latency anatomy (docs/serving.md)
+    replayed: bool = False
 
     def __post_init__(self):
         if self.rows < 1:
@@ -194,7 +199,33 @@ class Request:
             "service_s": self.service_s,
             "latency_s": self.latency_s,
             "slo_ok": self.slo_ok,
+            "replayed": self.replayed,
         }
+
+    # -- write-ahead log round trip (runtime.checkpoint) --------------------
+    def wal_fields(self) -> dict:
+        """The identity fields an ``admit`` WAL record persists — enough
+        to rebuild the request for post-crash replay (timing state is
+        re-derived on replay, not restored)."""
+        return {
+            "rid": self.rid, "rows": self.rows,
+            "prompt_len": self.prompt_len, "gen": self.gen,
+            "t_arrival": self.t_arrival, "slo_s": self.slo_s,
+            "klass": self.klass, "priority": self.priority,
+            "retries": self.retries,
+        }
+
+    @classmethod
+    def from_wal(cls, rec: dict) -> "Request":
+        """Rebuild a replayable request from an ``admit`` WAL record:
+        fresh ``submitted`` status (it re-enters admission), original
+        arrival/deadline/retry budget, ``replayed`` marker set."""
+        return cls(rid=int(rec["rid"]), rows=int(rec["rows"]),
+                   prompt_len=int(rec["prompt_len"]), gen=int(rec["gen"]),
+                   t_arrival=float(rec["t_arrival"]),
+                   slo_s=float(rec["slo_s"]), klass=str(rec["klass"]),
+                   priority=int(rec["priority"]),
+                   retries=int(rec.get("retries", 0)), replayed=True)
 
 
 class RequestSource:

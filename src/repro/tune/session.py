@@ -36,6 +36,11 @@ Wiring notes:
     observations are folded in (``refit``) before the search, and every
     measurement taken during the search whose metrics carry per-side
     times (``t_host`` / ``t_device``) is observed back into the loop.
+  * ``ledger`` hooks a :class:`~repro.runtime.checkpoint.MeasurementLedger`:
+    every real measurement is appended to its write-ahead log before the
+    search proceeds, so a crash mid-tune loses nothing — rerunning the
+    same seeded session replays the measured prefix from the ledger
+    (zero re-measurement) and only spends budget on the tail.
 """
 
 from __future__ import annotations
@@ -73,8 +78,14 @@ class TuningSession:
         truth: Callable[[Mapping[str, Any]], Any] | None = None,
         seed: int | None = None,
         observer: Any = None,
+        ledger: Any = None,
     ):
         self.space = space
+        self.ledger = ledger
+        if ledger is not None and evaluator is not None:
+            # Wrap the raw scalar/metrics oracle before MetricsEvaluator
+            # normalization so ledger hits and misses share one shape.
+            evaluator = ledger.wrap(evaluator)
         self.evaluator = as_metrics_evaluator(evaluator, evaluator_batch)
         self.objective = objective if objective is not None else Time()
         self.strategy = strategy

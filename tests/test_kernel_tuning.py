@@ -260,7 +260,10 @@ def test_hand_edited_stale_config_is_dropped(tmp_path, tuned_path_disabled):
     assert ktune.resolve_config("rwkv6_wkv", meta,
                                 jnp.float32) == out.best_config
 
-    data = json.loads(path.read_text())
+    # The store writes a checksummed {"checksum", "entries"} envelope;
+    # hand-edit the entries and write back the legacy flat layout (which
+    # the loader still accepts) to model an old hand-maintained file.
+    data = json.loads(path.read_text())["entries"]
     for entry in data.values():
         for report in entry["reports"].values():
             report["best_config"]["chunk"] = 999      # out of the domain
